@@ -1,0 +1,89 @@
+"""Paper headline numbers: P/D-Serve vs aggregated serving (6.7x E2E
+throughput) and vs the first disaggregated commercial version (+60%).
+
+Three systems at the SAME total instance count:
+  aggregated — both phases per instance, shared HBM, prefill stalls decode;
+  disagg v1  — mixed pool, 1:1 ratio, queue-status scheduler, block-fixed
+               transfer (the paper's baseline);
+  P/D-Serve  — fine-grained per-scenario groups with Eq.1-profiled ratios,
+               on-demand forwarding, block-free transfer.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.aggregated import AggregatedSim
+from repro.core.cluster_sim import ClusterSim, SimConfig, run_workload
+from repro.core.perf_model import InstanceProfile, optimal_ratio
+from repro.core.profiles import profile_for
+from repro.core.requests import DEFAULT_SCENARIOS, WorkloadGenerator
+
+TOTAL = 18
+HORIZON = 90.0
+LOAD = 120.0
+
+
+def _workload(seed):
+    gen = WorkloadGenerator(DEFAULT_SCENARIOS, base_rps=LOAD, seed=seed)
+    return gen.arrivals(HORIZON)
+
+
+def run() -> list:
+    rows: list[Row] = []
+    prof = profile_for(get_config("pangu-38b"))
+
+    # ---- aggregated baseline
+    agg = AggregatedSim(prof, n_instances=TOTAL, b_p=4, b_d=6, seed=1)
+    m_agg = agg.run(_workload(21), HORIZON + 40)
+    rows.append(("e2e/aggregated_rps", m_agg["throughput_rps"],
+                 f"phi={m_agg['phi']:.3f}"))
+
+    # ---- disaggregated v1: mixed pool, 1:1, baseline sched, block-fixed
+    sim = ClusterSim(SimConfig(profile=prof, transfer_mode="block_fixed"),
+                     n_prefill=TOTAL // 2, n_decode=TOTAL - TOTAL // 2,
+                     policy="baseline", seed=2)
+    m_v1 = run_workload(sim, _workload(22), HORIZON + 40)
+    rows.append(("e2e/disagg_v1_rps", m_v1["throughput_rps"],
+                 f"x{m_v1['throughput_rps']/max(m_agg['throughput_rps'],1e-9):.1f}_vs_agg,"
+                 f"succ={m_v1['success_rate']:.2f}"))
+
+    # ---- P/D-Serve: fine-grained groups, per-scenario Eq.1 ratio
+    # allocate instances to scenarios by traffic weight, then split P/D
+    # by the scenario's own profile (paper §3.3 "profiling in advance")
+    wsum = sum(s.weight for s in DEFAULT_SCENARIOS)
+    alloc = {}
+    left = TOTAL
+    for i, sc in enumerate(DEFAULT_SCENARIOS):
+        n = max(2, round(TOTAL * sc.weight / wsum)) if i < 5 else max(2, left)
+        n = min(n, left - 2 * (len(DEFAULT_SCENARIOS) - i - 1))
+        alloc[sc.name] = n
+        left -= n
+    thr = 0.0
+    ok = fail = 0
+    ratios = []
+    all_reqs = _workload(22)
+    for sc in DEFAULT_SCENARIOS:
+        n = alloc[sc.name]
+        iprof = InstanceProfile(
+            ttft_bs=prof.ttft(4 * (sc.prefix_len + sc.query_len_mean),
+                              4 * sc.prefix_len * 0.9),
+            b_p=4, r_pre=1.0, tpot_bs=prof.tpot(16), b_d=16,
+            gen_tokens=sc.out_tokens_mean, xi=0.015)
+        n_p, n_d = optimal_ratio(iprof, n)
+        ratios.append(f"{sc.name.split('/')[1]}={n_p}:{n_d}")
+        reqs = [r for r in all_reqs if r.scenario == sc.name]
+        sim = ClusterSim(SimConfig(profile=prof, transfer_mode="block_free"),
+                         n_prefill=n_p, n_decode=n_d, policy="ondemand",
+                         seed=2)
+        m = run_workload(sim, reqs, HORIZON + 40)
+        thr += m["throughput_rps"]
+        ok += m["completed"]
+        fail += m["failed"]
+    succ = ok / max(ok + fail, 1)
+    x_agg = thr / max(m_agg["throughput_rps"], 1e-9)
+    gain_v1 = (thr / max(m_v1["throughput_rps"], 1e-9) - 1) * 100
+    rows.append(("e2e/pdserve_rps", thr,
+                 f"succ={succ:.2f},{'|'.join(ratios)}"))
+    rows.append(("e2e/pdserve_vs_aggregated_x", x_agg, "paper:6.7x"))
+    rows.append(("e2e/pdserve_vs_v1_gain_pct", gain_v1, "paper:60pct"))
+    return rows

@@ -1,0 +1,41 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp refs.
+
+On-TPU these compile natively; interpret-mode wall times only prove the
+code path runs — roofline terms come from the dry-run, not from here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.kernels import ops, ref
+
+
+def run() -> list:
+    rows: list[Row] = []
+    rng = np.random.default_rng(0)
+    L, NB, BS, kvd, hd = 8, 128, 16, 256, 64
+    storage = jnp.asarray(rng.normal(size=(L, NB, BS, 2 * kvd)), jnp.float32)
+    idx = jnp.asarray(rng.permutation(NB)[:64], jnp.int32)
+    buf = jnp.asarray(rng.normal(size=(L, 64 * BS, 2 * kvd)), jnp.float32)
+    pages = storage[0]
+    B, MAXB = 8, 8
+    q = jnp.asarray(rng.normal(size=(B, (kvd // hd) * 4, hd)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, NB, (B, MAXB)), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, MAXB * BS, B), jnp.int32)
+
+    pairs = [
+        ("kv_gather", lambda: ops.kv_gather(storage, idx),
+         lambda: ref.kv_gather(storage, idx)),
+        ("kv_scatter", lambda: ops.kv_scatter(storage, buf, idx),
+         lambda: ref.kv_scatter(storage, buf, idx)),
+        ("paged_attention", lambda: ops.paged_attention(q, pages, bt, lens),
+         lambda: ref.paged_attention(q, pages, bt, lens)),
+    ]
+    for name, k_fn, r_fn in pairs:
+        t_k = timeit(lambda: k_fn().block_until_ready(), iters=3)
+        t_r = timeit(lambda: r_fn().block_until_ready(), iters=3)
+        rows.append((f"kernels/{name}_pallas_us", t_k, "interpret_mode"))
+        rows.append((f"kernels/{name}_ref_us", t_r, "jnp_oracle"))
+    return rows

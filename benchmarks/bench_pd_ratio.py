@@ -1,0 +1,59 @@
+"""Paper Fig. 12 + Fig. 13a: P/D mismatch and ratio adjustment.
+
+Sweeps n_p:n_d at fixed total instances; the Eq.1 optimum should beat the
+worst fixed ratio by >= 60% E2E throughput (paper's claim)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.cluster_sim import ClusterSim, SimConfig, run_workload
+from repro.core.perf_model import InstanceProfile, optimal_ratio, throughput
+from repro.core.profiles import profile_for
+from repro.core.requests import Scenario, WorkloadGenerator
+
+
+def run() -> list:
+    rows: list[Row] = []
+    prof = profile_for(get_config("pangu-38b"))
+    # a decode-heavy scenario (long generations) stresses the ratio
+    sc = Scenario("bench/gen", "bench", 1024, 4, 256, 64, 320, 64,
+                  slo_ttft=6.0)
+    total = 12
+    horizon = 90.0
+
+    # analytic Eq.1 optimum from the profiled InstanceProfile
+    iprof = InstanceProfile(
+        ttft_bs=prof.ttft(4 * 1400, 0), b_p=4, r_pre=0.6,
+        tpot_bs=prof.tpot(16), b_d=16, gen_tokens=sc.out_tokens_mean,
+        xi=0.02)
+    n_p_opt, n_d_opt = optimal_ratio(iprof, total)
+    rows.append(("pd_ratio/eq1_optimal_np", n_p_opt,
+                 f"of_{total}_instances"))
+
+    results = {}
+    for n_p in range(1, total):
+        n_d = total - n_p
+        gen = WorkloadGenerator([sc], base_rps=60.0, seed=5)
+        reqs = gen.arrivals(horizon)
+        sim = ClusterSim(SimConfig(profile=prof), n_prefill=n_p,
+                         n_decode=n_d, policy="ondemand", seed=4)
+        m = run_workload(sim, reqs, horizon + 30)
+        results[n_p] = m
+    best_np = max(results, key=lambda k: results[k]["throughput_rps"])
+    best = results[best_np]
+    even = results[total // 2]              # the naive 1:1 deployment
+    worst = min(results.values(), key=lambda m: m["throughput_rps"])
+    gain = (best["throughput_rps"] / max(even["throughput_rps"], 1e-9)
+            - 1) * 100
+    gain_worst = (best["throughput_rps"]
+                  / max(worst["throughput_rps"], 1e-9) - 1) * 100
+    for n_p in sorted(results):
+        m = results[n_p]
+        rows.append((f"pd_ratio/throughput_{n_p}p{total-n_p}d",
+                     m["throughput_rps"],
+                     f"phi={m['phi']:.3f},ttft_p50={m['ttft_p50']:.2f}"))
+    rows.append(("pd_ratio/best_vs_1to1_gain_pct", gain,
+                 f"best={best_np}p(paper:>=60),eq1_said={n_p_opt}p"))
+    rows.append(("pd_ratio/best_vs_worst_gain_pct", gain_worst,
+                 "blind_ratio_penalty"))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Fig. 1b + Fig. 3a: prefix-hit rate drives T_p, and fine-grained
+per-scenario groups keep prefixes hot vs a mixed pool under the same HBM."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.cluster_sim import ClusterSim, SimConfig, run_workload
+from repro.core.profiles import profile_for
+from repro.core.requests import DEFAULT_SCENARIOS, WorkloadGenerator
+
+
+def run() -> list:
+    rows: list[Row] = []
+    prof = profile_for(get_config("pangu-38b"))
+
+    # Fig 1b: TTFT vs hit rate (direct from the cost model)
+    batch_tokens = 4 * 2000
+    for hit_pct in (0, 30, 50, 70, 90):
+        hit_tokens = int(batch_tokens * hit_pct / 100)
+        rows.append((f"prefix/ttft_at_{hit_pct}pct_hit",
+                     prof.ttft(batch_tokens, hit_tokens) * 1e3, "ms"))
+
+    # grouped vs mixed under one HBM budget
+    budget = 48 * prof.kv_bytes_per_token * 1024
+    horizon = 60.0
+
+    def run_one(scenarios, n_p, n_d, seed):
+        gen = WorkloadGenerator(scenarios, base_rps=24.0, seed=seed)
+        reqs = gen.arrivals(horizon)
+        sim = ClusterSim(SimConfig(profile=prof, hbm_prefix_budget=budget),
+                         n_prefill=n_p, n_decode=n_d, seed=seed)
+        return run_workload(sim, reqs, horizon + 20)
+
+    mixed = run_one(DEFAULT_SCENARIOS, 6, 12, 9)
+    fine = [run_one([sc], 1, 2, 9) for sc in DEFAULT_SCENARIOS]
+    hit_f = sum(f["prefix_hit_rate"] for f in fine) / len(fine)
+    thr_f = sum(f["throughput_rps"] for f in fine)
+    ttft_f = sum(f["ttft_p50"] for f in fine) / len(fine)
+    rows.append(("prefix/mixed_pool_hit_rate", mixed["prefix_hit_rate"] * 100,
+                 f"ttft_p50={mixed['ttft_p50']:.3f}s"))
+    rows.append(("prefix/fine_grained_hit_rate", hit_f * 100,
+                 f"ttft_p50={ttft_f:.3f}s"))
+    rows.append(("prefix/fine_grained_throughput_gain_pct",
+                 (thr_f / max(mixed["throughput_rps"], 1e-9) - 1) * 100,
+                 "grouped_vs_mixed"))
+    return rows

@@ -1,0 +1,65 @@
+"""Paper Fig. 13b/c/d: auto workflows — tidal group scaling timeline,
+fault detection -> substitute integration, and model-loading (SFS vs SSD)."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.core.group import (PDGroup, T_CONNECT, T_HEALTH, T_LOAD_SFS,
+                              T_LOAD_SSD)
+from repro.core.mlops import MLOps, NodeMonitor
+from repro.core.requests import tidal_rate
+from repro.core.zookeeper import MetaStore
+
+
+def run() -> list:
+    rows: list[Row] = []
+    # Fig 13d: pre-compiled model loading, two storages, two models
+    for storage, t_load in (("ssd", T_LOAD_SSD), ("sfs", T_LOAD_SFS)):
+        total = T_CONNECT + t_load + T_HEALTH
+        rows.append((f"recovery/substitute_ready_{storage}_s", total,
+                     "connect+load+health(paper:minutes)"))
+
+    # Fig 13c: fault -> substitute timeline
+    meta = MetaStore()
+    g = PDGroup("bench/g", "s", meta)
+    g.setup(0.0, 4, 8)
+    ml = MLOps(meta, NodeMonitor(seed=2, fault_rate_per_hour=0.0))
+    rec = ml.recover(1000.0, g, g.members("D")[0], "device_reset")
+    rows.append(("recovery/auto_recovery_s", rec.recovery_time,
+                 f"ratio_after={g.ratio[0]}:{g.ratio[1]}"))
+
+    # Fig 13b: tidal scaling events over one simulated day
+    g2 = PDGroup("bench/tidal", "s", MetaStore())
+    g2.setup(0.0, 2, 4)
+    ml2 = MLOps(MetaStore())
+    events = {"scale_out": 0, "scale_in": 0}
+    t = 0.0
+    while t < 86400.0:
+        act = ml2.auto_scale(t, g2, base_rps=40.0,
+                             rps_capacity_per_pair=11.0)
+        if act:
+            events[act] += 1
+        t += 1800.0
+    rows.append(("recovery/tidal_scale_out_events", events["scale_out"],
+                 f"scale_in={events['scale_in']},peak_rate="
+                 f"{tidal_rate(40.0, 43200.0):.1f}rps"))
+
+    # §3.7 disaster recovery: a region fails mid-run, service continues
+    from repro.configs import get_config
+    from repro.core.cluster_sim import ClusterSim, SimConfig
+    from repro.core.profiles import profile_for
+    from repro.core.regions import Region, ServiceRouter
+    from repro.core.requests import Scenario, WorkloadGenerator
+    prof = profile_for(get_config("pangu-38b"))
+    sc = Scenario("svc/x", "svc", 512, 2, 128, 32, 64, 16, 3.0)
+    regions = [Region(n, {sc.name: ClusterSim(SimConfig(profile=prof),
+                                              n_prefill=2, n_decode=4,
+                                              policy="ondemand", seed=i)})
+               for i, n in enumerate(("region-a", "region-b"))]
+    router = ServiceRouter(regions, seed=0)
+    gen = WorkloadGenerator([sc], base_rps=10, seed=6)
+    m = router.run(gen.arrivals(40.0), 70.0, fail_at=20.0,
+                   fail_region="region-a")
+    rows.append(("recovery/region_failover_success_pct",
+                 m["success_rate"] * 100,
+                 f"dropped={m['dropped']},routed={m['routed']}"))
+    return rows

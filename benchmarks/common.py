@@ -1,0 +1,22 @@
+"""Shared benchmark helpers. Every bench returns rows:
+(name, us_per_call_or_metric, derived_string)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timeit(fn: Callable, *, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(rows: List[Row]):
+    for name, val, derived in rows:
+        print(f"{name},{val:.3f},{derived}")

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,value,derived`` CSV. See DESIGN.md §7 for the figure map."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (bench_e2e, bench_forwarding, bench_kernels,
+                        bench_pd_ratio, bench_prefix_cache, bench_recovery,
+                        bench_transfer)
+from benchmarks.common import emit
+
+ALL = {
+    "transfer": bench_transfer,       # Fig 4, 14c/d
+    "forwarding": bench_forwarding,   # Fig 3b, 14a/b
+    "pd_ratio": bench_pd_ratio,       # Fig 12, 13a
+    "prefix": bench_prefix_cache,     # Fig 1b, 3a
+    "e2e": bench_e2e,                 # 6.7x / 60% headline
+    "recovery": bench_recovery,       # Fig 13b/c/d
+    "kernels": bench_kernels,         # kernel microbench
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    a = ap.parse_args(argv)
+    picks = [s for s in a.only.split(",") if s] or list(ALL)
+    print("name,value,derived")
+    for name in picks:
+        emit(ALL[name].run())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,53 @@
+"""End-to-end driver (the paper's kind): serve batched requests across a
+multi-instance P/D group, comparing block-free vs block-fixed transfer and
+showing gateway rejections + zookeeper metadata.
+
+  PYTHONPATH=src python examples/disaggregated_serving.py
+"""
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.transfer import LinkModel  # noqa: E402
+from repro.serving.cluster import MiniCluster, ServeRequest  # noqa: E402
+
+
+def workload(cfg, n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i,
+                         tokens=list(rng.integers(0, cfg.vocab_size,
+                                                  int(rng.integers(6, 24)))),
+                         max_new_tokens=6)
+            for i in range(n)]
+
+
+def main():
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    print(f"arch: {cfg.name} (MoE {cfg.moe.num_experts}e top-{cfg.moe.top_k})")
+    for mode in ("block_free", "block_fixed"):
+        mc = MiniCluster(cfg, n_prefill=2, n_decode=2, transfer_mode=mode,
+                         link=LinkModel())
+        reqs = workload(cfg, 10)
+        t0 = time.time()
+        mc.run(reqs, max_ticks=200)
+        xf = mc.xfer.stats
+        sim_d2d = float(np.mean([t.time_s for t in xf])) if xf else 0.0
+        msgs = int(np.mean([t.n_msgs for t in xf])) if xf else 0
+        print(f"  {mode:12s}: {sum(r.done for r in reqs)}/{len(reqs)} done, "
+              f"wall {time.time()-t0:.1f}s, modeled D2D "
+              f"{sim_d2d*1e3:.2f}ms over {msgs} msgs/transfer, "
+              f"gateway rejections={mc.rejections}")
+    # the zookeeper view of the group
+    mc_meta = mc.meta
+    print("zookeeper group g0:",
+          {role: mc_meta.group_members("g0", role) for role in ("P", "D")})
+    print("first instance RoCE IPs:",
+          mc_meta.instances["P0"].roce_ips[:4], "...")
+
+
+if __name__ == "__main__":
+    main()

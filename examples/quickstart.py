@@ -1,0 +1,45 @@
+"""Quickstart: serve a small model through the full disaggregated path.
+
+  PYTHONPATH=src python examples/quickstart.py [--arch granite-3-8b]
+
+What happens: prompts hit the gateway, an idle prefill accepts (busy ones
+reject), the prompt's KVCache is gathered to a contiguous buffer, moved to
+a decode instance's paged pool, RecvScatter'd back into blocks, and decode
+streams tokens — all with real JAX compute on a reduced config.
+"""
+import argparse
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import ALIASES, get_config  # noqa: E402
+from repro.serving.cluster import MiniCluster, ServeRequest  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=sorted(ALIASES))
+    a = ap.parse_args()
+    cfg = get_config(a.arch).reduced()
+    print(f"model: {cfg.name} ({cfg.num_layers}L d={cfg.d_model})")
+
+    cluster = MiniCluster(cfg, n_prefill=1, n_decode=1)
+    rng = np.random.default_rng(0)
+    requests = [
+        ServeRequest(rid=i,
+                     tokens=list(rng.integers(0, cfg.vocab_size, 10 + i)),
+                     max_new_tokens=8,
+                     on_token=lambda t, i=i: print(f"  [sse rid={i}] {t}"))
+        for i in range(3)
+    ]
+    cluster.run(requests, max_ticks=60)
+    for r in requests:
+        print(f"request {r.rid}: prompt[{len(r.tokens)}] -> {r.generated}")
+    assert all(r.done for r in requests)
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

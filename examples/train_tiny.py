@@ -1,0 +1,32 @@
+"""Train a ~100M-param llama-like model for a few hundred steps on CPU.
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 300]
+
+(The paper is a serving system — the serving driver in
+disaggregated_serving.py is the primary end-to-end example; this exercises
+the training substrate: data pipeline, AdamW, remat, checkpointing.)
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    a = ap.parse_args()
+    # ~100M params: 12 layers x d512 over the minicpm vocab
+    sys.exit(train_main([
+        "--arch", "minicpm-2b", "--reduced",
+        "--d-model", "512", "--layers", "12",
+        "--steps", str(a.steps), "--batch", "8", "--seq", "256",
+        "--lr", "1e-3", "--log-every", "25",
+        "--save", "results/ckpt_tiny.npz",
+    ]))
+
+
+if __name__ == "__main__":
+    main()

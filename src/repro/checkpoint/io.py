@@ -1,0 +1,57 @@
+"""Sharding-aware checkpointing (npz + tree manifest).
+
+Pre-compiled-model semantics from the paper (§3.2): artifacts are written
+once after training and loaded by any instance from shared storage; loading
+restores per-leaf arrays and (optionally) re-shards onto a mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_params(path: str, params, step: int = 0, meta: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path, **flat)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "meta": meta or {},
+    }
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_params(path: str, like, *, shardings=None):
+    """`like` provides the pytree structure; `shardings` optionally places
+    each leaf on a mesh (device_put with NamedSharding)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(leaves_p))
+    out = []
+    for (pth, leaf), sh in zip(leaves_p, shard_leaves):
+        key = SEP.join(
+            p.key if hasattr(p, "key") else str(p.idx) for p in pth)
+        arr = data[key]
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,18 @@
+"""Granite-3 8B [hf:ibm-granite/granite-3.0 family].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=12800,
+    vocab_size=49155,
+    head_dim=128,
+    rope_theta=10_000_000.0,
+)

@@ -1,0 +1,22 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (kv=16) routed-expert d_ff=1408, vocab=151936,
+MoE 60 routed top-4 + 4 shared experts.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    arch_type="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=60, top_k=4, num_shared_experts=4,
+                  d_ff_expert=1408, layout="all"),
+)

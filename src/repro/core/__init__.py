@@ -1,0 +1,14 @@
+# P/D-Serve core: the paper's contribution as a composable system.
+#
+#   perf_model    — E2E model (Phi, T_p, T_d) + Eq.1 ratio optimizer
+#   requests      — scenario-structured workload (shared prefixes, tidal)
+#   prefix_cache  — HBM-budgeted prefix-KVCache placement (C1)
+#   profiles      — roofline-derived serving cost profiles
+#   zookeeper     — service/scenario/group/RoCE metadata store
+#   group         — fine-grained P/D groups, dynamic RoCE workflows (C1)
+#   mlops         — health, minimum-cost recovery, scaling, ratio control
+#   cluster_sim   — discrete-event cluster simulator (gateway policies, C2)
+#   transfer      — block-free D2D KVCache transfer engine (C3)
+from repro.core import (aggregated, cluster_sim, group, mlops,  # noqa: F401
+                        perf_model, prefix_cache, profiles, regions,
+                        requests, transfer, zookeeper)

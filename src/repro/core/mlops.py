@@ -1,0 +1,137 @@
+"""MLOps control plane (paper §3.3-3.4): health monitoring, minimum-cost
+auto recovery, group-based auto scaling, and P/D ratio recommendation.
+
+The fault path follows the paper exactly: a per-node resident monitor
+writes xPU status to a (mounted) file; MLOps polls it, classifies fault
+levels, logically removes the instance in the Zookeeper meta (no new
+traffic), spawns ONE stateless substitute container, runs dynamic RoCE
+construction + model load, and only then re-admits it — no harm to the
+running service, and running requests are completed/cleaned by the
+protection path (default texts, stop zombie connections).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.group import PDGroup, T_CONNECT, T_HEALTH, T_LOAD_SSD
+from repro.core.perf_model import BottleneckMonitor, InstanceProfile, \
+    optimal_ratio
+from repro.core.requests import tidal_rate
+from repro.core.zookeeper import MetaStore
+
+FAULT_LEVELS = ("recoverable", "device_reset", "node_replace")
+
+
+@dataclass
+class FaultRecord:
+    t_detect: float
+    iid: str
+    level: str
+    t_removed: float = -1.0
+    t_substitute_ready: float = -1.0
+
+    @property
+    def recovery_time(self) -> float:
+        return self.t_substitute_ready - self.t_detect
+
+
+class NodeMonitor:
+    """Per-node resident process writing xPU status to a health 'file'."""
+
+    def __init__(self, seed: int = 0, fault_rate_per_hour: float = 0.004):
+        self.rng = random.Random(seed)
+        self.fault_rate = fault_rate_per_hour
+        self.status: Dict[str, str] = {}     # iid -> "ok" | fault level
+
+    def poll(self, t: float, iids: List[str], dt_hours: float
+             ) -> Dict[str, str]:
+        for iid in iids:
+            if self.status.get(iid, "ok") != "ok":
+                continue
+            if self.rng.random() < self.fault_rate * dt_hours:
+                self.status[iid] = self.rng.choice(FAULT_LEVELS)
+        return dict(self.status)
+
+    def clear(self, iid: str):
+        self.status[iid] = "ok"
+
+
+class MLOps:
+    def __init__(self, meta: MetaStore, monitor: Optional[NodeMonitor] = None):
+        self.meta = meta
+        self.monitor = monitor or NodeMonitor()
+        self.faults: List[FaultRecord] = []
+        self.scale_events: List[Tuple[float, str, str]] = []
+
+    # ------------------------------------------------- fault & recovery
+    def check_and_recover(self, t: float, group: PDGroup,
+                          dt_hours: float = 0.1) -> List[FaultRecord]:
+        iids = group.members("P") + group.members("D")
+        status = self.monitor.poll(t, iids, dt_hours)
+        out = []
+        for iid in iids:
+            if status.get(iid, "ok") == "ok":
+                continue
+            rec = self.recover(t, group, iid, status[iid])
+            out.append(rec)
+        return out
+
+    def recover(self, t: float, group: PDGroup, iid: str,
+                level: str) -> FaultRecord:
+        """Minimum-cost substitution: exactly ONE new stateless container."""
+        rec = FaultRecord(t, iid, level)
+        meta = self.meta.instances.get(iid)
+        role = meta.role if meta else "P"
+        # 1. logical removal: update zk meta -> no further forwarding;
+        #    peers are informed so no transfer targets the fault instance
+        self.meta.remove_instance(t, iid)
+        rec.t_removed = t
+        # 2. one substitute container: dynamic RoCE construction + load
+        t_ready = t + T_CONNECT + T_LOAD_SSD + T_HEALTH
+        new_iid = f"{iid.split('+')[0]}+s{len(self.faults)}"
+        self.meta.gather_instance(t_ready, new_iid, role, group.gid)
+        self.meta.health_report(t_ready, new_iid)
+        rec.t_substitute_ready = t_ready
+        self.monitor.clear(iid)
+        self.faults.append(rec)
+        return rec
+
+    # -------------------------------------------------- group scaling
+    def auto_scale(self, t: float, group: PDGroup, base_rps: float,
+                   rps_capacity_per_pair: float, *,
+                   tidal: bool = True) -> Optional[str]:
+        """Time-triggered group-granularity scale in/out (Fig. 13b)."""
+        rate = tidal_rate(base_rps, t) if tidal else base_rps
+        n_p, n_d = group.ratio
+        pairs = max(min(n_p, n_d), 1)
+        have = pairs * rps_capacity_per_pair
+        if rate > have * 0.9:
+            group.adjust_ratio(t, n_p + 1, n_d + 1)
+            self.scale_events.append((t, group.gid, "scale_out"))
+            return "scale_out"
+        if rate < have * 0.45 and min(n_p, n_d) > 1:
+            group.adjust_ratio(t, n_p - 1, n_d - 1)
+            self.scale_events.append((t, group.gid, "scale_in"))
+            return "scale_in"
+        return None
+
+    # ------------------------------------------------ ratio adjustment
+    def recommend_ratio(self, profile: InstanceProfile, total: int
+                        ) -> Tuple[int, int]:
+        return optimal_ratio(profile, total)
+
+    def maybe_adjust_ratio(self, t: float, group: PDGroup,
+                           monitor: BottleneckMonitor,
+                           profile: InstanceProfile) -> Optional[str]:
+        """Online path (Fig. 12c): E2E alarm + T_p proportion trend."""
+        rec = monitor.recommendation()
+        if rec is None:
+            return None
+        n_p, n_d = group.ratio
+        if rec == "more_prefill":
+            group.adjust_ratio(t, n_p + 1, max(n_d - 1, 1))
+        else:
+            group.adjust_ratio(t, max(n_p - 1, 1), n_d + 1)
+        return rec

@@ -1,0 +1,54 @@
+"""Serving cost profiles derived from a ModelConfig + chip constants.
+
+The discrete-event simulator needs TTFT/TPOT/transfer costs per instance.
+They are derived from the same roofline arithmetic the dry-run uses:
+prefill is compute-bound (2·N·tokens / instance FLOPs), decode is
+memory-bound (params + cache bytes / HBM bw), transfer time comes from
+KV bytes over the LinkModel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ATTN, ModelConfig
+
+# per-instance hardware (8 chips like the paper's Atlas instances)
+CHIPS_PER_INSTANCE = 8
+PEAK_FLOPS = 197e12 * CHIPS_PER_INSTANCE * 0.45   # 45% prefill MFU
+HBM_BW = 819e9 * CHIPS_PER_INSTANCE * 0.7
+
+
+@dataclass(frozen=True)
+class ServingProfile:
+    name: str
+    kv_bytes_per_token: int
+    prefill_tok_rate: float      # tokens/s at reference batch
+    prefill_fixed: float         # per-batch fixed overhead (s)
+    tpot_base: float             # decode iteration floor (s)
+    tpot_per_req: float          # added per concurrent request (s)
+    params_bytes: int
+    prefix_reuse_eff: float = 0.95   # fraction of hit tokens skipped
+
+    def ttft(self, batch_tokens: int, hit_tokens: int = 0) -> float:
+        eff = batch_tokens - self.prefix_reuse_eff * hit_tokens
+        return self.prefill_fixed + max(eff, 0.0) / self.prefill_tok_rate
+
+    def tpot(self, concurrent: int) -> float:
+        return self.tpot_base + self.tpot_per_req * concurrent
+
+
+def profile_for(cfg: ModelConfig) -> ServingProfile:
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == ATTN)
+    kv_bpt = 2 * cfg.kv_dim * n_attn * 2          # K+V, bf16
+    n = cfg.param_count(active_only=True)
+    params_bytes = cfg.param_count() * 2
+    tok_rate = PEAK_FLOPS / (2.0 * n)             # prefill tokens/s
+    # decode iteration: weights + avg cache traffic per token
+    tpot_base = params_bytes / CHIPS_PER_INSTANCE / HBM_BW * CHIPS_PER_INSTANCE
+    tpot_base = params_bytes / HBM_BW
+    tpot_per_req = kv_bpt * 2048 / HBM_BW         # ~2k ctx cache read
+    return ServingProfile(
+        name=cfg.name, kv_bytes_per_token=kv_bpt,
+        prefill_tok_rate=tok_rate, prefill_fixed=0.015,
+        tpot_base=tpot_base, tpot_per_req=tpot_per_req,
+        params_bytes=params_bytes)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLM, text_to_tokens  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.distribution.sharding import (  # noqa: F401
+    ShardingRules, batch_axes_for, make_shardings, spec_from_axes)

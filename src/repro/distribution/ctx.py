@@ -1,0 +1,79 @@
+"""Activation-sharding context.
+
+Modeling code calls ``constrain(x, logical_axes)`` at key activation
+boundaries (post-embedding, block outputs, loss chunks). Under a
+``sharding_ctx(mesh)`` — entered by the step builders when a mesh is
+supplied — this becomes ``with_sharding_constraint`` with the logical axes
+resolved by the divisibility-aware rules; with no context it is a no-op, so
+single-device CPU tests and the real serving engine run unchanged.
+
+Without these constraints GSPMD propagation can (and does — observed on the
+whisper train lowering) replicate the whole loss computation when the vocab
+dim is not shardable, inflating per-device temp memory by the data-parallel
+factor.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.distribution.sharding import AxisRules, spec_from_axes
+
+ACT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    # sequence-parallel residual stream at layer boundaries (Megatron-SP
+    # analog). MEASURED (see EXPERIMENTS.md §Perf): seq-sharding the carry
+    # cuts the remat stack 16x but triggers a 4.6x all-gather storm under
+    # GSPMD (re-gather per use, 164s vs 35s collective term on 110B train);
+    # gradient-accumulation microbatching achieves the memory goal without
+    # it, so the default is OFF. Kept as a switchable rule for the perf log.
+    "seq_act": (),
+    "q_heads_act": ("model",),
+    "vocab": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "d_inner": ("model",),
+    "cache_seq": ("data", "pod"),
+    "embed": (),
+    # MoE dispatch buffers: unmapped by default (propagation decides);
+    # the expert-parallel act rules pin them to the canonical EP layout.
+    "expert_act": (),
+    "cap_act": (),
+    None: (),
+}
+
+# expert-parallel activation rules (prefill_ep / train_ep hillclimb modes):
+# dispatch buffers (E, C, d) live expert->model, capacity->data, d local —
+# expert matmuls become fully device-local; only the token<->capacity
+# resharding (an all-to-all) moves data.
+ACT_RULES_EP: AxisRules = dict(ACT_RULES)
+ACT_RULES_EP["expert_act"] = ("model",)
+ACT_RULES_EP["cap_act"] = ("data", "pod")
+
+_tls = threading.local()
+
+
+@contextmanager
+def sharding_ctx(mesh, rules: Optional[AxisRules] = None):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules or ACT_RULES) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_from_axes(axes, x.shape, mesh, rules)
+    if not any(p is not None for p in spec):
+        return x  # nothing resolved: leave placement to propagation
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

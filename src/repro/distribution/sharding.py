@@ -1,0 +1,179 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+JAX rejects uneven input shardings (verified empirically), so every rule
+application checks divisibility and drops mesh axes that do not divide the
+dimension. Within one parameter, a mesh axis is used at most once
+(PartitionSpec constraint): dims are resolved left-to-right and later dims
+skip already-claimed axes.
+
+Modes
+-----
+train / prefill: 2D FSDP x TP. `embed`-like dims shard over (pod, data),
+    ff/heads/vocab over `model`; batch over (pod, data).
+decode (baseline): same weight sharding (naive port of the training layout —
+    the paper-faithful baseline for §Perf); cache batch over (pod, data) with
+    seq-dim fallback for batch=1, kv_dim over `model`.
+decode_opt (beyond-paper): weight-stationary decode — weights keep their 2D
+    sharding but activations are resharded instead of weights being gathered:
+    realized by sharding `embed` on `model`-adjacent axes so GSPMD reduces
+    activations (small at decode) rather than all-gathering weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+AxisRules = Dict[Optional[str], Tuple[str, ...]]
+
+# weights
+PARAM_RULES_2D: AxisRules = {
+    "embed": ("pod", "data"),
+    "vocab": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "d_inner": ("model",),
+    "expert": ("data", "pod"),
+    "layers": (),
+    None: (),
+}
+
+# weight-stationary decode (§Perf hillclimb): never gather weights — keep the
+# same 2D layout but ALSO shard the contracting `embed` dim over `model`'s
+# complement so each einsum is local + activation reduce.
+PARAM_RULES_TP: AxisRules = {
+    "embed": (),
+    "vocab": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "d_inner": ("model",),
+    "expert": ("data", "pod"),
+    "layers": (),
+    None: (),
+}
+
+# MoE expert-parallel over `model` (§Perf hillclimb, prefill): experts move
+# to the TP axis so expert weights stay resident per device (no per-chunk
+# expert-weight gathers over `data`); the per-expert ffn dim is small
+# (1408) and lives replicated within the expert row.
+PARAM_RULES_EP = dict(PARAM_RULES_2D)
+PARAM_RULES_EP["expert"] = ("model",)
+PARAM_RULES_EP["ff"] = ()
+
+CACHE_RULES: AxisRules = {
+    "layers": (),
+    "batch": ("pod", "data"),
+    "cache_seq": ("data", "pod"),
+    "kv_heads": ("model",),
+    "d_inner": ("model",),
+    None: (),
+}
+
+# decode hillclimb iteration 2: shard the cache SEQUENCE over `model`
+# (flash-decoding style) — kv_dim-sharding splits GQA heads (8 kv heads
+# cannot shard 16 ways), forcing GSPMD to all-gather the whole cache per
+# step; seq-sharding keeps cache reads local and reduces score tiles.
+CACHE_RULES_SEQ: AxisRules = {
+    "layers": (),
+    "batch": ("pod", "data"),
+    "cache_seq": ("model",),
+    "kv_heads": (),
+    "d_inner": ("model",),
+    None: (),
+}
+
+# decode hillclimb iteration 3: REPLICATE the KV cache over `model` and
+# shard only the Q heads. When kv_heads < model-degree neither kv_dim- nor
+# seq-sharding can avoid gathers (measured: 5.5GB resp. 44GB per step);
+# GQA's whole point is that the KV cache is small — holding it replicated
+# per TP rank removes every attention collective.
+CACHE_RULES_REPL: AxisRules = {
+    "layers": (),
+    "batch": ("pod", "data"),
+    "cache_seq": (),
+    "kv_heads": (),
+    "d_inner": ("model",),
+    None: (),
+}
+
+BATCH_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    None: (),
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    params: AxisRules
+    cache: AxisRules
+    batch: AxisRules
+
+    @staticmethod
+    def for_mode(mode: str) -> "ShardingRules":
+        if mode in ("train", "prefill", "decode"):
+            return ShardingRules(PARAM_RULES_2D, CACHE_RULES, BATCH_RULES)
+        if mode == "decode_opt":
+            return ShardingRules(PARAM_RULES_TP, CACHE_RULES, BATCH_RULES)
+        if mode == "prefill_ep":
+            return ShardingRules(PARAM_RULES_EP, CACHE_RULES, BATCH_RULES)
+        if mode == "decode_opt2":
+            return ShardingRules(PARAM_RULES_TP, CACHE_RULES_SEQ,
+                                 BATCH_RULES)
+        if mode == "decode_opt3":
+            return ShardingRules(PARAM_RULES_TP, CACHE_RULES_REPL,
+                                 BATCH_RULES)
+        raise ValueError(mode)
+
+
+def spec_from_axes(axes: Sequence[Optional[str]], shape: Sequence[int],
+                   mesh: Mesh, rules: AxisRules) -> P:
+    used = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        cand = rules.get(ax, ())
+        got = []
+        prod = 1
+        for a in cand:
+            if a in used or a not in mesh.shape:
+                continue
+            if dim % (prod * mesh.shape[a]) == 0:
+                got.append(a)
+                prod *= mesh.shape[a]
+                used.add(a)
+        if not got:
+            parts.append(None)
+        elif len(got) == 1:
+            parts.append(got[0])
+        else:
+            parts.append(tuple(got))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def make_shardings(axes_tree: Tree, shapes_tree: Tree, mesh: Mesh,
+                   rules: AxisRules) -> Tree:
+    """axes_tree: tree of axis-name tuples; shapes_tree: matching tree of
+    ShapeDtypeStruct (or anything with .shape)."""
+    def mk(axes, sds):
+        return NamedSharding(mesh, spec_from_axes(axes, sds.shape, mesh, rules))
+    return jax.tree.map(mk, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_axes_for(batch_tree: Tree) -> Tree:
+    """Logical axes for an input batch dict: dim0=batch, rest unsharded
+    (token/label/embed/frame tensors)."""
+    def f(x):
+        nd = len(x.shape)
+        return ("batch",) + (None,) * (nd - 1) if nd else ()
+    return jax.tree.map(f, batch_tree)

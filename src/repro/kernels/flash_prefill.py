@@ -1,0 +1,92 @@
+"""Pallas kernel: causal flash attention for prefill (one head-batch tile).
+
+The prefill hot spot (T_p drives Eq.1/Eq.2). Flash pattern on TPU: grid =
+(batch*heads, q_tiles, kv_tiles) with kv innermost; online-softmax state
+(m, l, acc) in VMEM scratch persists across the kv dimension; each step
+multiplies a (q_tile, hd)x(hd, kv_tile) score block on the MXU, masks
+causally, and accumulates. q_tile/kv_tile default 128 — lane-aligned and
+small enough that q-tile + kv-tile + acc stay well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            q_tile: int, kv_tile: int, kv_tiles: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kj <= qi)   # skip fully-masked kv tiles (causal)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)          # (q_tile, hd)
+        k = k_ref[0].astype(jnp.float32)          # (kv_tile, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale               # (q_tile, kv_tile)
+        qpos = qi * q_tile + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        kpos = kj * kv_tile + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, -1e30)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(kpos <= qpos, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+        m_ref[...] = m_cur
+
+    @pl.when(kj == kv_tiles - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         q_tile: int = 128, kv_tile: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Causal attention. q/k/v: (bh, s, hd) with heads flattened into the
+    leading dim (GQA expansion happens in the wrapper). Returns (bh, s, hd).
+    """
+    bh, s, hd = q.shape
+    assert s % q_tile == 0 and s % kv_tile == 0, (s, q_tile, kv_tile)
+    q_tiles = s // q_tile
+    kv_tiles = s // kv_tile
+    scale = 1.0 / math.sqrt(hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(bh, q_tiles, kv_tiles),
+        in_specs=[
+            pl.BlockSpec((1, q_tile, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_tile, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_tile, hd), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile,), jnp.float32),
+            pltpu.VMEM((q_tile, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, q_tile=q_tile, kv_tile=kv_tile,
+                             kv_tiles=kv_tiles, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

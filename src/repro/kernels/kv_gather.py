@@ -1,0 +1,43 @@
+"""Pallas kernel: gather discrete KV blocks into ONE contiguous buffer.
+
+The C3 sender hot path (paper §3.6, Fig. 10): the RDMA engine wants a
+single contiguous byte range; this kernel linearizes a request's paged
+blocks into that buffer. TPU mapping: the block table rides in scalar-
+prefetch SMEM (it drives the BlockSpec index_map), each grid step DMAs one
+(block_size, width) page HBM->VMEM->HBM; width = 2*kv_dim is a multiple of
+128 lanes for every assigned arch, and block_size=16 fills the sublanes of
+a bf16/f32 tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[0]
+
+
+def kv_gather_pallas(storage: jax.Array, idx: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """storage: (L, NB, BS, W); idx: (n,) int32 -> (L, n*BS, W)."""
+    L, NB, BS, W = storage.shape
+    n = idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, BS, W),
+                         lambda l, i, idx_ref: (l, idx_ref[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BS, W), lambda l, i, idx_ref: (l, i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, n * BS, W), storage.dtype),
+        interpret=interpret,
+    )(idx, storage)

@@ -1,0 +1,48 @@
+"""Pallas kernel: RecvScatter — restore discrete KV blocks from bytes.
+
+The C3 receiver hot path (paper §3.6): the contiguous buffer that arrived
+over RDMA is scattered back into the receiver's paged pool at the
+destination block table. Implemented as an *operator* (the paper's
+flexibility option): the pool buffer is donated via input_output_aliases
+so untouched pages keep their content and touched pages are overwritten
+in place, without interrupting other operators in the stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, pool_ref, buf_ref, out_ref):
+    out_ref[0] = buf_ref[...]
+
+
+def kv_scatter_pallas(storage: jax.Array, buf: jax.Array, idx: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """storage: (L, NB, BS, W); buf: (L, n*BS, W); idx: (n,) int32.
+    Returns the updated pool (same buffer, donated)."""
+    L, NB, BS, W = storage.shape
+    n = idx.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(L, n),
+        in_specs=[
+            # the pool rides through untouched via aliasing; present it to
+            # the kernel so the alias has a position in the operand list
+            pl.BlockSpec((1, 1, BS, W),
+                         lambda l, i, idx_ref: (l, idx_ref[i], 0, 0)),
+            pl.BlockSpec((1, BS, W), lambda l, i, idx_ref: (l, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, BS, W),
+                               lambda l, i, idx_ref: (l, idx_ref[i], 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(storage.shape, storage.dtype),
+        input_output_aliases={1: 0},   # pool operand aliases the output
+        interpret=interpret,
+    )(idx, storage, buf.astype(storage.dtype))

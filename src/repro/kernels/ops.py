@@ -1,0 +1,60 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python with the same BlockSpec semantics; on TPU they compile
+natively. ``REPRO_KERNELS=ref`` forces the pure-jnp oracles (used by the
+engine's fallback path and for differential testing).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.kv_gather import kv_gather_pallas
+from repro.kernels.kv_scatter import kv_scatter_pallas
+from repro.kernels.flash_prefill import flash_prefill_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _use_ref() -> bool:
+    return os.environ.get("REPRO_KERNELS", "pallas") == "ref"
+
+
+@partial(jax.jit, static_argnames=())
+def _kv_gather_ref(storage, idx):
+    return ref.kv_gather(storage, idx)
+
+
+def kv_gather(storage: jax.Array, idx: jax.Array) -> jax.Array:
+    if _use_ref():
+        return _kv_gather_ref(storage, idx)
+    return kv_gather_pallas(storage, idx, interpret=_interpret())
+
+
+def kv_scatter(storage: jax.Array, buf: jax.Array,
+               idx: jax.Array) -> jax.Array:
+    if _use_ref():
+        return jax.jit(ref.kv_scatter)(storage, buf, idx)
+    return kv_scatter_pallas(storage, buf, idx, interpret=_interpret())
+
+
+def paged_attention(q: jax.Array, kv_pages: jax.Array,
+                    block_table: jax.Array, lens: jax.Array) -> jax.Array:
+    if _use_ref():
+        return jax.jit(ref.paged_attention)(q, kv_pages, block_table, lens)
+    return paged_attention_pallas(q, kv_pages, block_table, lens,
+                                  interpret=_interpret())
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    if _use_ref():
+        return jax.jit(ref.flash_prefill)(q, k, v)
+    return flash_prefill_pallas(q, k, v, interpret=_interpret())

@@ -1,0 +1,99 @@
+"""Pallas kernel: decode attention over a paged KV pool (one layer).
+
+Flash-decoding over pages: grid = (batch, max_blocks); the block table and
+lengths ride in scalar-prefetch SMEM and drive the KV page index_map; the
+online-softmax state (m, l, acc) lives in VMEM scratch that persists across
+the page dimension of the grid. Each step DMAs one (block_size, 2*kv_dim)
+page into VMEM — the working set is q-tile + one page, far under the 16MB
+VMEM budget; hd=64/128 keeps the MXU matmuls lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bt_ref, lens_ref, q_ref, kv_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bs: int, nkv: int, g: int, hd: int, max_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kvd = nkv * hd
+    page = kv_ref[0]                       # (bs, 2*kvd)
+    k = page[:, :kvd].reshape(bs, nkv, hd)
+    v = page[:, kvd:].reshape(bs, nkv, hd)
+    q = q_ref[0].reshape(nkv, g, hd)       # (nkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("kgd,skd->kgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale   # (nkv, g, bs)
+
+    valid_here = lens_ref[b] - j * bs      # tokens valid in this page
+    tok = jax.lax.broadcasted_iota(jnp.int32, (nkv, g, bs), 2)
+    live = (tok < valid_here) & (bt_ref[b, j] >= 0)
+    s = jnp.where(live, s, -1e30)
+
+    m_prev = m_ref[...]                    # (nkv, g)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])      # (nkv, g, bs)
+    p = jnp.where(live, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[..., None]
+                    + jnp.einsum("kgs,skd->kgd", p,
+                                 v.astype(jnp.float32)))
+    m_ref[...] = m_cur
+
+    @pl.when(j == max_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).reshape(
+            nkv * g, hd).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q: jax.Array, kv_pages: jax.Array,
+                           block_table: jax.Array, lens: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, nq, hd); kv_pages: (NB, BS, 2*kvd); block_table: (B, MAXB)
+    int32 (-1 pad); lens: (B,). Returns (B, nq, hd)."""
+    B, nq, hd = q.shape
+    NB, BS, W = kv_pages.shape
+    kvd = W // 2
+    nkv = kvd // hd
+    g = nq // nkv
+    MAXB = block_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,             # block_table, lens
+        grid=(B, MAXB),
+        in_specs=[
+            pl.BlockSpec((1, nq, hd), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec(
+                (1, BS, W),
+                lambda b, j, bt, ln: (jnp.maximum(bt[b, j], 0), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nq, hd), lambda b, j, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nkv, g), jnp.float32),
+            pltpu.VMEM((nkv, g), jnp.float32),
+            pltpu.VMEM((nkv, g, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, bs=BS, nkv=nkv, g=g, hd=hd,
+                             max_blocks=MAXB)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nq, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, lens, q, kv_pages)

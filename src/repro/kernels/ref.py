@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_gather(storage: jax.Array, idx: jax.Array) -> jax.Array:
+    """storage: (L, NB, BS, W); idx: (n,) int32 -> (L, n*BS, W)."""
+    g = jnp.take(storage, idx, axis=1)
+    L, n, bs, w = g.shape
+    return g.reshape(L, n * bs, w)
+
+
+def kv_scatter(storage: jax.Array, buf: jax.Array,
+               idx: jax.Array) -> jax.Array:
+    """storage: (L, NB, BS, W); buf: (L, n*BS, W); idx: (n,) -> storage'."""
+    L, t, w = buf.shape
+    n = idx.shape[0]
+    bs = storage.shape[2]
+    return storage.at[:, idx].set(buf.reshape(L, n, bs, w))
+
+
+def paged_attention(q: jax.Array, kv_pages: jax.Array,
+                    block_table: jax.Array, lens: jax.Array) -> jax.Array:
+    """Decode attention over a paged KV pool (one layer).
+
+    q: (B, nq, hd); kv_pages: (NB, BS, 2*kv_dim); block_table: (B, MAXB)
+    int32 (-1 padded); lens: (B,) valid token counts. Returns (B, nq, hd).
+    """
+    B, nq, hd = q.shape
+    NB, BS, W = kv_pages.shape
+    kvd = W // 2
+    nkv = kvd // hd
+    g = nq // nkv
+    MAXB = block_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    bt = jnp.clip(block_table, 0, NB - 1)
+    gathered = kv_pages[bt]                     # (B, MAXB, BS, W)
+    kv = gathered.reshape(B, MAXB * BS, W)
+    k = kv[..., :kvd].reshape(B, MAXB * BS, nkv, hd)
+    v = kv[..., kvd:].reshape(B, MAXB * BS, nkv, hd)
+    qg = q.reshape(B, nkv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(MAXB * BS)
+    valid = pos[None] < lens[:, None]           # (B, S)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, nq, hd)
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal attention oracle. q/k/v: (bh, s, hd)."""
+    bh, s, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)

@@ -1,0 +1,167 @@
+import os
+# LICM disabled: XLA-CPU otherwise hoists whole-residual-stack converts out
+# of the backward while loop (+10GiB/device on the 110B train lowering).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# --- everything below may import jax ---------------------------------------
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ALIASES, get_config  # noqa: E402
+from repro.launch import roofline as roofline_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs  # noqa: E402
+from repro.models.config import INPUT_SHAPES  # noqa: E402
+from repro.models.steps import (  # noqa: E402
+    decode_window, make_prefill_step, make_serve_step, make_train_step)
+
+
+def model_flops_total(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), N = active params
+    excluding the embedding lookup (tied embeddings count once as the head)."""
+    n = cfg.param_count(active_only=True)
+    if not cfg.tie_embeddings:
+        n -= cfg.vocab_size * cfg.d_model  # lookup-only embedding
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def skip_reason(arch: str, shape_name: str) -> str:
+    if arch == "whisper-base" and shape_name == "long_500k":
+        return ("skip: encoder-decoder with hard 448-token decoder limit; "
+                "512k windowed decoder is out-of-family (DESIGN.md)")
+    return ""
+
+
+def auto_microbatches(cfg, shape, multi_pod: bool) -> int:
+    """Gradient-accumulation factor for the train shape: big residual
+    streams need activation transients divided to fit 16GiB v5e HBM."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 8192:
+        return 16 if not multi_pod else 8
+    if cfg.d_model >= 4096:
+        return 4 if not multi_pod else 2
+    if cfg.d_model >= 2048:
+        return 2
+    return 1
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool, mode: str = "",
+              microbatches: int = 0, moe_dispatch: str = ""):
+    cfg = get_config(arch)
+    if moe_dispatch and cfg.moe is not None:
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  dispatch=moe_dispatch))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mode = mode or shape.kind
+    args, shardings = input_specs(cfg, shape, mesh, mode=mode)
+
+    if shape.kind == "train":
+        mb = microbatches or auto_microbatches(cfg, shape, multi_pod)
+        step = make_train_step(cfg, mesh=mesh, microbatches=mb)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        act_rules = None
+        if mode.endswith("_ep"):
+            from repro.distribution.ctx import ACT_RULES_EP
+            act_rules = ACT_RULES_EP
+        step = make_prefill_step(cfg, mesh=mesh, act_rules=act_rules)
+        donate = ()
+    else:
+        step = make_serve_step(cfg, window=decode_window(cfg, shape), mesh=mesh)
+        donate = (1,)
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=donate)
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mf = model_flops_total(cfg, shape)
+    from repro.models import caches as caches_lib
+    from repro.models.params import param_count_actual
+    p_dev = param_count_actual(cfg) * 2.0 / chips
+    if shape.kind == "decode":
+        w = decode_window(cfg, shape)
+        cache_dev = caches_lib.cache_num_bytes(
+            cfg, shape.global_batch, shape.seq_len, window=w) / chips
+        tokens_dev = shape.global_batch / chips
+    else:
+        cache_dev = (caches_lib.cache_num_bytes(
+            cfg, shape.global_batch, shape.seq_len) / chips
+            if shape.kind == "prefill" else 0.0)
+        tokens_dev = shape.global_batch * shape.seq_len / chips
+    floor = roofline_lib.analytic_bytes_floor(
+        params_bytes_dev=p_dev, cache_bytes_dev=cache_dev,
+        tokens_dev=tokens_dev, d_model=cfg.d_model,
+        num_layers=cfg.num_layers, kind=shape.kind)
+    rl = roofline_lib.analyze(compiled, chips=chips, model_flops_total=mf,
+                              bytes_floor=floor)
+    return compiled, rl, {"t_lower": t_lower, "t_compile": t_compile,
+                          "chips": chips, "mode": mode}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", required=True, choices=sorted(ALIASES))
+    ap.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="", help="override sharding mode "
+                    "(e.g. decode_opt)")
+    ap.add_argument("--moe-dispatch", default="",
+                    choices=["", "capacity", "sorted"])
+    ap.add_argument("--out", default="", help="write JSON result here")
+    ap.add_argument("--quiet", action="store_true")
+    a = ap.parse_args(argv)
+
+    reason = skip_reason(a.arch, a.shape)
+    result = {"arch": a.arch, "shape": a.shape,
+              "mesh": "2x16x16" if a.multi_pod else "16x16"}
+    if reason:
+        result["skipped"] = reason
+        print(reason)
+    else:
+        compiled, rl, meta = lower_one(a.arch, a.shape,
+                                       multi_pod=a.multi_pod, mode=a.mode,
+                                       moe_dispatch=a.moe_dispatch)
+        if not a.quiet:
+            print(compiled.memory_analysis())   # proves it fits
+            ca = compiled.cost_analysis()
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})                  # FLOPs/bytes for §Roofline
+        result.update(meta)
+        result["roofline"] = rl.to_dict()
+        print(f"[dryrun] {a.arch} x {a.shape} x {result['mesh']} "
+              f"mode={meta['mode']} OK  "
+              f"compute={rl.compute_s*1e3:.2f}ms memory={rl.memory_s*1e3:.2f}ms "
+              f"collective={rl.collective_s*1e3:.2f}ms dominant={rl.dominant} "
+              f"mem/dev={rl.mem_per_dev_bytes/2**30:.2f}GiB fits={rl.fits_hbm} "
+              f"(lower {meta['t_lower']:.1f}s compile {meta['t_compile']:.1f}s)")
+
+    if a.out:
+        with open(a.out, "w") as f:
+            json.dump(result, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

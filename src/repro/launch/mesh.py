@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. The dry-run process sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices but only {len(devices)} are "
+            f"visible; the dry-run entrypoint must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"importing jax")
+    import numpy as np
+    dev_array = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for CPU tests."""
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(shape), axes)
+
+
+# TPU v5e hardware constants for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (approx, per direction)
+HBM_PER_CHIP = 16 * 1024**3   # 16 GiB

@@ -1,0 +1,92 @@
+"""Pre-compiled model store (paper §3.2: "Pre-compiled Model Loaded in
+Minutes").
+
+Models are compiled ONCE as a subsequent task after training and written
+to shared storage (SFS/SSD in the paper); every P/D instance then loads
+the serialized executable instead of recompiling. Here: jax AOT
+``serialize_executable`` blobs + a JSON manifest keyed by
+(arch, step kind, shape) so prefill and decode instances fetch
+role-specific artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import serialize_executable as se
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.steps import (decode_window, make_prefill_step,
+                                make_serve_step, make_train_step)
+
+Tree = Any
+
+
+def _step_for(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh=mesh), (0, 1)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh=mesh), ()
+    return make_serve_step(cfg, window=decode_window(cfg, shape),
+                           mesh=mesh), (1,)
+
+
+class ArtifactStore:
+    """File-backed store of serialized executables."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _paths(self, key: str) -> Tuple[str, str]:
+        base = os.path.join(self.root, key.replace("/", "_"))
+        return base + ".xbin", base + ".manifest.json"
+
+    # ------------------------------------------------------------ compile
+    def precompile(self, key: str, cfg: ModelConfig, shape: ShapeConfig,
+                   abstract_args: Tuple, *, in_shardings=None,
+                   mesh=None) -> Dict[str, float]:
+        step, donate = _step_for(cfg, shape, mesh)
+        t0 = time.time()
+        jitted = (jax.jit(step, in_shardings=in_shardings,
+                          donate_argnums=donate)
+                  if in_shardings is not None
+                  else jax.jit(step, donate_argnums=donate))
+        compiled = jitted.lower(*abstract_args).compile()
+        t_compile = time.time() - t0
+        blob, in_tree, out_tree = se.serialize(compiled)
+        xbin, man = self._paths(key)
+        with open(xbin, "wb") as f:
+            pickle.dump({"blob": blob, "in_tree": in_tree,
+                         "out_tree": out_tree}, f)
+        manifest = {
+            "key": key, "arch": cfg.name, "kind": shape.kind,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+            "compile_s": t_compile,
+            "size_bytes": os.path.getsize(xbin),
+        }
+        with open(man, "w") as f:
+            json.dump(manifest, f, indent=1)
+        return manifest
+
+    # --------------------------------------------------------------- load
+    def load(self, key: str):
+        """Instance-side load: deserialize, no recompilation."""
+        xbin, man = self._paths(key)
+        t0 = time.time()
+        with open(xbin, "rb") as f:
+            d = pickle.load(f)
+        fn = se.deserialize_and_load(d["blob"], d["in_tree"], d["out_tree"])
+        t_load = time.time() - t0
+        manifest = json.load(open(man))
+        manifest["load_s"] = t_load
+        return fn, manifest
+
+    def available(self):
+        return sorted(f[:-5] for f in os.listdir(self.root)
+                      if f.endswith(".xbin"))

@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct stand-ins for every model input, plus their shardings.
+
+`input_specs(cfg, shape)` builds the abstract arguments for the step the
+shape exercises (train / prefill / decode) — weak-type-correct, shardable,
+no device allocation. Used by the dry-run and AOT launchers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import (
+    ShardingRules, batch_axes_for, make_shardings)
+from repro.models import caches as caches_lib
+from repro.models import params as params_lib
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.steps import decode_window
+
+Tree = Any
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tree:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    batch: Tree = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+        else:
+            batch["tokens"] = tok
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            batch["labels"] = tok
+    return batch
+
+
+def abstract_opt_state(params_abs: Tree) -> Tree:
+    f32 = lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, params_abs),
+        "nu": jax.tree.map(f32, params_abs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                mode: Optional[str] = None,
+                param_dtype=jnp.bfloat16
+                ) -> Tuple[Tuple[Tree, ...], Tuple[Tree, ...]]:
+    """Returns (abstract_args, in_shardings) for the step of `shape`."""
+    mode = mode or shape.kind
+    rules = ShardingRules.for_mode(mode)
+    p_abs = params_lib.abstract_params(cfg, dtype=param_dtype)
+    p_axes = params_lib.param_axes(cfg)
+    p_shard = make_shardings(p_axes, p_abs, mesh, rules.params)
+
+    if shape.kind == "train":
+        batch = batch_specs(cfg, shape)
+        b_shard = make_shardings(batch_axes_for(batch), batch, mesh,
+                                 rules.batch)
+        opt = abstract_opt_state(p_abs)
+        opt_shard = {
+            "mu": jax.tree.map(lambda _, s: s, opt["mu"], p_shard),
+            "nu": jax.tree.map(lambda _, s: s, opt["nu"], p_shard),
+            "step": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+        }
+        return (p_abs, opt, batch), (p_shard, opt_shard, b_shard)
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape)
+        b_shard = make_shardings(batch_axes_for(batch), batch, mesh,
+                                 rules.batch)
+        return (p_abs, batch), (p_shard, b_shard)
+
+    if shape.kind == "decode":
+        window = decode_window(cfg, shape)
+        cache = caches_lib.abstract_cache(cfg, shape.global_batch,
+                                          shape.seq_len, window=window)
+        c_axes = caches_lib.cache_axes(cfg, shape.global_batch,
+                                       shape.seq_len, window=window)
+        c_shard = make_shardings(c_axes, cache, mesh, rules.cache)
+        tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        t_shard = make_shardings((("batch",),), (tok,), mesh, rules.batch)[0]
+        return (p_abs, cache, tok), (p_shard, c_shard, t_shard)
+
+    raise ValueError(shape.kind)

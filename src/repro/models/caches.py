@@ -1,0 +1,110 @@
+"""Decode-cache construction: shapes, abstract specs, logical axes.
+
+Flat per-layer KV layout (b, S, kv_dim) — contiguous bytes, the layout the
+paper's block-free D2D transfer (C3) wants, and always divisibly shardable
+on the `model` axis (kv_dim = num_kv_heads * head_dim is a multiple of 16
+for every assigned arch, unlike the head count itself).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ATTN, ModelConfig
+from repro.models.params import block_period, num_blocks
+
+Tree = Dict[str, Any]
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int, *,
+                 window: Optional[int] = None) -> Tree:
+    """Shape/axes tree for the decode cache.
+
+    Leaves are (shape, axes) tuples; axes use logical names consumed by
+    repro.distribution.sharding.
+    """
+    nblk = num_blocks(cfg)
+    period = block_period(cfg)
+    kinds = cfg.layer_kinds()
+    S = window if window is not None else seq
+    layers: Tree = {}
+    for i in range(period):
+        c: Tree = {}
+        if kinds[i] == ATTN:
+            c["k"] = ((nblk, batch, S, cfg.kv_dim),
+                      ("layers", "batch", "cache_seq", "kv_heads"))
+            c["v"] = ((nblk, batch, S, cfg.kv_dim),
+                      ("layers", "batch", "cache_seq", "kv_heads"))
+        else:
+            s = cfg.ssm_cfg
+            d_in = s.expand * cfg.d_model
+            gn = s.n_groups * s.d_state
+            nh = d_in // s.head_dim
+            k = s.conv_kernel
+            c["conv_x"] = ((nblk, batch, d_in, k - 1),
+                           ("layers", "batch", "d_inner", None))
+            c["conv_b"] = ((nblk, batch, gn, k - 1),
+                           ("layers", "batch", None, None))
+            c["conv_c"] = ((nblk, batch, gn, k - 1),
+                           ("layers", "batch", None, None))
+            c["state"] = ((nblk, batch, nh, s.d_state, s.head_dim),
+                          ("layers", "batch", None, None, None))
+        if cfg.is_encoder_decoder:
+            c["xk"] = ((nblk, batch, cfg.encoder_seq, cfg.kv_dim),
+                       ("layers", "batch", None, "kv_heads"))
+            c["xv"] = ((nblk, batch, cfg.encoder_seq, cfg.kv_dim),
+                       ("layers", "batch", None, "kv_heads"))
+        layers[f"sub{i}"] = c
+    return {"layers": layers, "pos": ((), ())}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int, *,
+                   window: Optional[int] = None,
+                   dtype=jnp.bfloat16) -> Tree:
+    tree = cache_shapes(cfg, batch, seq, window=window)
+
+    def mk(path, leaf):
+        shape, _ = leaf
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if shape == ():
+            dt = jnp.int32
+        elif name == "state":
+            dt = jnp.float32  # SSD state accumulates; keep full precision
+        else:
+            dt = dtype
+        return jax.ShapeDtypeStruct(shape, dt)
+    return jax.tree_util.tree_map_with_path(mk, tree, is_leaf=_is_leaf)
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq: int, *,
+               window: Optional[int] = None) -> Tree:
+    return jax.tree.map(lambda leaf: leaf[1],
+                        cache_shapes(cfg, batch, seq, window=window),
+                        is_leaf=_is_leaf)
+
+
+def zeros_cache(cfg: ModelConfig, batch: int, seq: int, *,
+                window: Optional[int] = None, dtype=jnp.float32,
+                pos: int = 0) -> Tree:
+    def mk(sds):
+        if sds.shape == ():
+            return jnp.asarray(pos, jnp.int32)
+        dt = jnp.float32 if sds.dtype == jnp.float32 else dtype
+        return jnp.zeros(sds.shape, dt)
+    return jax.tree.map(mk, abstract_cache(cfg, batch, seq, window=window,
+                                           dtype=dtype))
+
+
+def cache_num_bytes(cfg: ModelConfig, batch: int, seq: int, *,
+                    window: Optional[int] = None, bytes_per_el: int = 2) -> int:
+    import numpy as np
+    tree = cache_shapes(cfg, batch, seq, window=window)
+    return sum(int(np.prod(shape)) * bytes_per_el
+               for shape, _ in jax.tree.leaves(tree, is_leaf=_is_leaf)
+               if shape != ())
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)

@@ -1,0 +1,788 @@
+"""Pure-JAX forward passes for every assigned architecture family.
+
+Three entry points:
+  * ``forward_train``   — full-sequence forward + chunked LM loss.
+  * ``forward_prefill`` — full-sequence forward, returns (first token logits,
+                          decode cache) — the P in P/D.
+  * ``forward_decode``  — ONE token against a cache — the D in P/D.
+
+Design notes (TPU adaptation, see DESIGN.md §3):
+  * layers are stacked and executed with lax.scan (small HLO, remat-able);
+  * attention is chunked over query blocks (flash-style online masking is
+    unnecessary on the lowering path: per-chunk score tiles stay bounded);
+  * KV caches use a FLAT per-layer layout (b, S, kv_dim) so the cache is
+    contiguous bytes — the exact layout the paper's block-free D2D transfer
+    wants, and evenly shardable on the `model` axis regardless of head count;
+  * Mamba2 uses the chunked SSD algorithm with a lax.scan over chunks
+    (state carried, O(chunk^2) tiles — MXU friendly);
+  * MoE uses scatter-based capacity dispatch (no (T,E,C) one-hot blowup).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distribution.ctx import constrain
+from repro.models.config import ATTN, MAMBA, ModelConfig
+from repro.models.params import block_period, num_blocks
+
+Tree = Dict[str, Any]
+
+DEFAULT_Q_CHUNK = 512
+
+
+# ---------------------------------------------------------------- basics
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    # Variance via an f32-accumulating einsum, scaling in the compute dtype.
+    # Writing the upcast as x.astype(f32)**2 materializes a full-tensor f32
+    # buffer per norm under XLA-CPU (observed: +2GiB per norm on 8k-wide
+    # models); the einsum form keeps f32 in the accumulator only.
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = (ss / x.shape[-1])[..., None]
+    inv = lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, hd) or (..., heads, hd) with scalar positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    # broadcast over the heads dim (and any leading dims positions lack)
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :] if ang.ndim == x.ndim - 1 \
+            else ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, x.shape[-1] // n))
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+
+
+# ---------------------------------------------------------------- attention
+
+def attention_seq(q: jax.Array, k: jax.Array, v: jax.Array, nkv: int, *,
+                  causal: bool, window: Optional[int] = None,
+                  q_chunk: int = 0) -> jax.Array:
+    """Full-sequence attention, chunked over query blocks.
+
+    q: (b, s, nq, hd); k, v: (b, sk, nkv, hd). Returns (b, s, nq, hd).
+
+    KV heads are expanded to the full query-head count: the (nkv, g)
+    factorization of GQA is usually NOT shardable on the `model` axis
+    (e.g. 8 kv x 8 groups on a 16-way axis) while nq itself is, and the
+    expansion is a transient, head-sharded buffer — cheap next to the
+    un-shardable score tiles it prevents.
+    """
+    b, s, nq, hd = q.shape
+    if not q_chunk:
+        # smaller score tiles when the head count cannot shard 16 ways
+        # (e.g. minicpm's 36 heads) — the tile is then device-replicated
+        q_chunk = DEFAULT_Q_CHUNK if nq % 16 == 0 else 128
+    sk = k.shape[1]
+    g = nq // nkv
+    scale = 1.0 / math.sqrt(hd)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = constrain(q, ("batch", None, "q_heads_act", None))
+    k = constrain(k, ("batch", None, "q_heads_act", None))
+    v = constrain(v, ("batch", None, "q_heads_act", None))
+    kpos = jnp.arange(sk)
+
+    def one_chunk(qi: jax.Array, q0) -> jax.Array:
+        # qi: (b, c, nq, hd); q0: first absolute query position
+        c = qi.shape[1]
+        scores = jnp.einsum("bqhd,bshd->bhqs", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = constrain(scores, ("batch", "q_heads_act", None, None))
+        if causal:
+            qpos = q0 + jnp.arange(c)
+            m = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                m &= (qpos[:, None] - kpos[None, :]) < window
+            scores = jnp.where(m[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+
+    if s <= q_chunk or s % q_chunk != 0:
+        return one_chunk(q, 0)
+    nc = s // q_chunk
+    qcs = jnp.moveaxis(q.reshape(b, nc, q_chunk, nq, hd), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inp):
+        i, qi = inp
+        return None, one_chunk(qi, i * q_chunk)
+
+    _, outs = lax.scan(body, None, (jnp.arange(nc), qcs))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, nq, hd)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     nkv: int, pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     k_new: Optional[jax.Array] = None,
+                     v_new: Optional[jax.Array] = None) -> jax.Array:
+    """One-token attention against a flat cache.
+
+    q: (b, nq, hd); k_cache/v_cache: (b, S, kv_dim) — the cache BEFORE the
+    current token is written. The current token's k/v are passed separately
+    as k_new/v_new (b, kv_dim), so the loop body reads the old cache slice
+    and only ever writes the one-token update: no read-after-write hazard
+    on the carried buffer, which keeps the while-loop cache in place
+    (copy-insertion otherwise clones the whole cache each step).
+
+    With `window`, the cache is a ring buffer of length S == window: the
+    slot being overwritten (pos % S) is exactly the token that just fell
+    out of the window, so valid slots are < min(pos, S) excluding it.
+    """
+    b, nq, hd = q.shape
+    S = k_cache.shape[1]
+    g = nq // nkv
+    scale = 1.0 / math.sqrt(hd)
+    k = _split_heads(k_cache, nkv)  # (b, S, nkv, hd)
+    v = _split_heads(v_cache, nkv)
+    qg = q.reshape(b, nkv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    slots = jnp.arange(S)
+    if window is not None:
+        valid = slots < jnp.minimum(pos, S)
+        valid &= slots != (pos % S)
+    else:
+        valid = slots < pos
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    if k_new is not None:
+        kn = k_new.reshape(b, nkv, hd)
+        vn = v_new.reshape(b, nkv, hd)
+        s_new = jnp.einsum("bkgd,bkd->bkg", qg, kn,
+                           preferred_element_type=jnp.float32) * scale
+        scores = jnp.concatenate([scores, s_new[..., None]], axis=-1)
+        probs = jax.nn.softmax(scores, axis=-1)
+        pc, pn = probs[..., :S], probs[..., S]
+        out = jnp.einsum("bkgs,bskd->bkgd", pc.astype(v.dtype), v)
+        out = out + pn.astype(v.dtype)[..., None] * vn[:, :, None, :]
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, nq, hd)
+
+
+def _attn_proj_qkv(p: Tree, x: jax.Array, cfg: ModelConfig, sfx: str = ""):
+    q = x @ p[f"wq{sfx}"]
+    k = x @ p[f"wk{sfx}"]
+    v = x @ p[f"wv{sfx}"]
+    if f"bq{sfx}" in p:
+        q = q + p[f"bq{sfx}"]
+        k = k + p[f"bk{sfx}"]
+        v = v + p[f"bv{sfx}"]
+    return q, k, v
+
+
+def attn_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
+                      causal: bool, positions: jax.Array,
+                      window: Optional[int], use_rope: bool = True,
+                      return_kv: bool = False):
+    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+    q, k, v = _attn_proj_qkv(p, x, cfg)
+    q = _split_heads(q, cfg.num_heads)
+    k = _split_heads(k, cfg.num_kv_heads)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    v4 = _split_heads(v, cfg.num_kv_heads)
+    o = attention_seq(q, k, v4, cfg.num_kv_heads, causal=causal, window=window)
+    h = h + _merge_heads(o) @ p["wo"]
+    if return_kv:
+        return h, (_merge_heads(k), v)
+    return h
+
+
+def cross_attn_seq(p: Tree, h: jax.Array, enc_out: jax.Array,
+                   cfg: ModelConfig, *, return_kv: bool = False):
+    x = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+    q = _split_heads(x @ p["wqx"], cfg.num_heads)
+    k = _split_heads(enc_out @ p["wkx"], cfg.num_kv_heads)
+    v = _split_heads(enc_out @ p["wvx"], cfg.num_kv_heads)
+    o = attention_seq(q, k, v, cfg.num_kv_heads, causal=False, window=None)
+    h = h + _merge_heads(o) @ p["wox"]
+    if return_kv:
+        return h, (_merge_heads(k), _merge_heads(v))
+    return h
+
+
+# ---------------------------------------------------------------- mlp / moe
+
+def mlp(p: Tree, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+MOE_TOKEN_CHUNK = 32768
+
+
+def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based top-k MoE with scatter dispatch, chunked over tokens.
+
+    x: (T, d). Returns (y (T, d), aux_loss scalar). Long sequences are
+    processed in token chunks (scan) so dispatch/one-hot/expert buffers stay
+    bounded — unchunked, the 1M-token deepseek prefill needs ~100GiB/device
+    of dispatch state.
+    """
+    T, d = x.shape
+    if T > MOE_TOKEN_CHUNK:
+        chunk = max(c for c in range(1, MOE_TOKEN_CHUNK + 1) if T % c == 0)
+        nc = T // chunk
+        x3 = x.reshape(nc, chunk, d)
+
+        @jax.checkpoint
+        def body(acc, xc):
+            yc, aux = _moe_dispatch(p, xc, cfg)
+            return acc + aux, yc
+
+        aux, ys = lax.scan(body, jnp.zeros((), jnp.float32), x3)
+        return ys.reshape(T, d), aux / nc
+    return _moe_dispatch(p, x, cfg)
+
+
+def _moe_dispatch(p: Tree, x: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe.dispatch == "sorted":
+        return _moe_dispatch_sorted(p, x, cfg)
+    return _moe_dispatch_capacity(p, x, cfg)
+
+
+def _moe_router(p: Tree, x: jax.Array, cfg: ModelConfig):
+    m = cfg.moe
+    logits = (x @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, m.top_k)                # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx.reshape(-1), m.num_experts, dtype=jnp.int32)
+    frac = jnp.mean(onehot.astype(jnp.float32), axis=0)
+    aux = m.num_experts * jnp.sum(frac * jnp.mean(probs, axis=0)) \
+        * m.router_aux_coef
+    return gates, idx, aux
+
+
+def _moe_dispatch_sorted(p: Tree, x: jax.Array, cfg: ModelConfig
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Dropless sort-based dispatch (Megablocks-style): tokens are sorted
+    by expert and each expert consumes a contiguous ragged segment via
+    lax.ragged_dot — the capacity scatter (which GSPMD lowers to a whole-
+    buffer all-reduce, §Perf E2) disappears entirely."""
+    m = cfg.moe
+    T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    gates, idx, aux = _moe_router(p, x, cfg)
+    flat_e = idx.reshape(-1)                              # (T*K,) token-major
+    order = jnp.argsort(flat_e)
+    x_kt = jnp.repeat(x, K, axis=0)                       # (T*K, d)
+    xs = jnp.take(x_kt, order, axis=0)
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    h = jax.nn.silu(lax.ragged_dot(xs, p["w_gate"], group_sizes)) * \
+        lax.ragged_dot(xs, p["w_up"], group_sizes)
+    ys = lax.ragged_dot(h, p["w_down"], group_sizes)
+    y_kt = jnp.zeros_like(x_kt).at[order].set(ys)
+    y = (y_kt * gates.reshape(-1)[:, None].astype(ys.dtype)) \
+        .reshape(T, K, d).sum(1)
+    if m.num_shared_experts:
+        y = y + mlp(p["shared"], x)
+    return y, aux
+
+
+def _moe_dispatch_capacity(p: Tree, x: jax.Array, cfg: ModelConfig
+                           ) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.moe
+    T, d = x.shape
+    E, K = m.num_experts, m.top_k
+    C = max(1, int(math.ceil(T * K / E * m.capacity_factor)))
+    logits = (x @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, K)                      # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # choice-major flattening: all first choices, then all second choices...
+    flat_e = idx.T.reshape(-1)                            # (K*T,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (K*T, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1)           # (K*T, E)
+    pos_tok = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_tok < C
+    slot = jnp.where(keep, flat_e * C + pos_tok, E * C)   # overflow -> dropped
+
+    x_kt = jnp.tile(x, (K, 1))                            # (K*T, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(x_kt)
+    xe = buf[: E * C].reshape(E, C, d)
+    # canonical EP layout under *_ep act rules (no-op otherwise): expert
+    # dim on `model`, capacity on `data` -> expert matmuls are local and
+    # only the token<->capacity resharding (all-to-all) moves data.
+    xe = constrain(xe, ("expert_act", "cap_act", None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = constrain(h, ("expert_act", "cap_act", None))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    ye = constrain(ye, ("expert_act", "cap_act", None)).reshape(E * C, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+    y_kt = ye[slot] * keep[:, None].astype(ye.dtype)
+    gates_kt = gates.T.reshape(-1)                        # (K*T,)
+    y = (y_kt * gates_kt[:, None].astype(ye.dtype)).reshape(K, T, d).sum(0)
+
+    if m.num_shared_experts:
+        y = y + mlp(p["shared"], x)
+
+    # load-balance aux loss (Switch-style)
+    frac = jnp.mean(onehot.astype(jnp.float32), axis=0)   # assignment fraction
+    mean_p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mean_p) * m.router_aux_coef
+    return y, aux
+
+
+# ---------------------------------------------------------------- mamba2 ssd
+
+def _causal_conv1d(x: jax.Array, w: jax.Array,
+                   init: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: (b, s, c); w: (c, k); init: (b, c, k-1)."""
+    b, s, c = x.shape
+    k = w.shape[1]
+    if init is None:
+        pad = jnp.zeros((b, k - 1, c), x.dtype)
+    else:
+        pad = jnp.swapaxes(init, 1, 2)  # (b, k-1, c)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + s, :] * w[:, i]
+    return out
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int,
+             init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (Mamba2, arXiv:2405.21060 listing 1), n_groups == 1.
+
+    x: (b, s, nh, hd); dt: (b, s, nh); A: (nh,); B, C: (b, s, n).
+    Returns y (b, s, nh, hd) and final state (b, nh, n, hd).
+    """
+    b, s, nh, hd = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:  # largest divisor of s not exceeding requested chunk
+        chunk = max(c for c in range(1, chunk + 1) if s % c == 0)
+    nc = s // chunk
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+    xs, dts, Bs, Cs = resh(x), resh(dt), resh(B), resh(C)
+    if init_state is None:
+        init_state = jnp.zeros((b, nh, n, hd), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def body(S, inp):
+        xc, dtc, Bc, Cc = inp          # (b,Q,nh,hd), (b,Q,nh), (b,Q,n), (b,Q,n)
+        da = dtc * A                   # (b,Q,nh)  (A negative)
+        cs = jnp.cumsum(da, axis=1)    # (b,Q,nh)
+        # intra-chunk
+        seg = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])       # (b,Q,K,nh)
+        seg = jnp.where(causal[None, :, :, None], seg, 0.0)
+        cb = jnp.einsum("bqn,bkn->bqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+        att = cb[..., None] * seg * dtc[:, None, :, :]             # (b,Q,K,nh)
+        y = jnp.einsum("bqkh,bkhp->bqhp", att, xc,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        y = y + jnp.einsum("bqn,bhnp->bqhp", Cc, S,
+                           preferred_element_type=jnp.float32) \
+            * jnp.exp(cs)[..., None]
+        # state update
+        total = cs[:, -1, :]                                        # (b,nh)
+        w_k = jnp.exp(total[:, None, :] - cs) * dtc                 # (b,Q,nh)
+        dS = jnp.einsum("bkn,bkh,bkhp->bhnp", Bc, w_k, xc,
+                        preferred_element_type=jnp.float32)
+        S = S * jnp.exp(total)[:, :, None, None] + dS
+        return S, y.astype(x.dtype)
+
+    S, ys = lax.scan(body, init_state, (xs, dts, Bs, Cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hd)
+    return y, S
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence. x: (b,nh,hd); dt: (b,nh); B,C: (b,n);
+    state: (b,nh,n,hd)."""
+    da = jnp.exp(dt * A)                                        # (b,nh)
+    dS = jnp.einsum("bn,bh,bhp->bhnp", B, dt, x,
+                    preferred_element_type=jnp.float32)
+    state = state * da[:, :, None, None] + dS
+    y = jnp.einsum("bn,bhnp->bhp", C, state,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype), state
+
+
+def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
+                       return_state: bool = False):
+    s_cfg = cfg.ssm_cfg
+    d_in = s_cfg.expand * cfg.d_model
+    nh = d_in // s_cfg.head_dim
+    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    bin_ = x @ p["w_b"]
+    cin = x @ p["w_c"]
+    dt = x @ p["w_dt"] + p["dt_bias"]
+    xc = jax.nn.silu(_causal_conv1d(xin, p["conv_x"]))
+    bc = jax.nn.silu(_causal_conv1d(bin_, p["conv_b"]))
+    cc = jax.nn.silu(_causal_conv1d(cin, p["conv_c"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    x4 = constrain(_split_heads(xc, nh), ("batch", None, "q_heads_act", None))
+    dt = constrain(dt, ("batch", None, "q_heads_act"))
+    y4, state = ssd_scan(x4, dt, A, bc, cc, s_cfg.chunk)
+    y4 = y4 + x4 * p["d_skip"][:, None].astype(x4.dtype)
+    y = _merge_heads(y4)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    out = h + y @ p["w_out"]
+    if return_state:
+        k = s_cfg.conv_kernel
+        tails = {
+            "conv_x": jnp.swapaxes(xin[:, -(k - 1):, :], 1, 2),
+            "conv_b": jnp.swapaxes(bin_[:, -(k - 1):, :], 1, 2),
+            "conv_c": jnp.swapaxes(cin[:, -(k - 1):, :], 1, 2),
+            "state": state,
+        }
+        return out, tails
+    return out
+
+
+def mamba_sublayer_step(p: Tree, h: jax.Array, cache: Tree,
+                        cfg: ModelConfig) -> Tuple[jax.Array, Tree]:
+    """One-token mamba step. h: (b, d). cache leaves unstacked."""
+    s_cfg = cfg.ssm_cfg
+    d_in = s_cfg.expand * cfg.d_model
+    nh = d_in // s_cfg.head_dim
+    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+    z = x @ p["w_z"]
+    xin = x @ p["w_x"]
+    bin_ = x @ p["w_b"]
+    cin = x @ p["w_c"]
+    dt = x @ p["w_dt"] + p["dt_bias"]
+
+    def conv_step(state, new, w):
+        win = jnp.concatenate([state, new[:, :, None]], axis=2)  # (b,c,k)
+        out = jnp.sum(win * w[None], axis=2)
+        return out, win[:, :, 1:]
+
+    xc, cx = conv_step(cache["conv_x"], xin, p["conv_x"])
+    bc, cb = conv_step(cache["conv_b"], bin_, p["conv_b"])
+    cc, ccs = conv_step(cache["conv_c"], cin, p["conv_c"])
+    xc, bc, cc = jax.nn.silu(xc), jax.nn.silu(bc), jax.nn.silu(cc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    x3 = xc.reshape(-1, nh, s_cfg.head_dim)
+    y3, state = ssd_step(x3, dt, A, bc, cc, cache["state"])
+    y3 = y3 + x3 * p["d_skip"][:, None].astype(x3.dtype)
+    y = y3.reshape(-1, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
+    out = h + y @ p["w_out"]
+    return out, {"conv_x": cx, "conv_b": cb, "conv_c": ccs,
+                 "state": state}
+
+
+# ---------------------------------------------------------------- blocks
+
+def _ffn_sublayer(p: Tree, h: jax.Array, cfg: ModelConfig, is_moe: bool):
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        x = rmsnorm(h, p["norm2"], cfg.norm_eps)
+        shp = x.shape
+        y, aux = moe_ffn(p["moe"], x.reshape(-1, shp[-1]), cfg)
+        h = h + y.reshape(shp)
+    elif cfg.d_ff > 0:
+        h = h + mlp(p["mlp"], rmsnorm(h, p["norm2"], cfg.norm_eps))
+    return h, aux
+
+
+def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
+              positions: jax.Array, causal: bool,
+              window: Optional[int], enc_out: Optional[jax.Array],
+              collect_cache: bool) -> Tuple[jax.Array, jax.Array, Tree]:
+    """Apply one repeating block (period sublayers). Returns (h, aux, cache)."""
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    period = block_period(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    cache_out: Tree = {}
+    use_rope = True  # decoder self-attn always uses RoPE (whisper deviation noted)
+    for i in range(period):
+        p = blk_params[f"sub{i}"]
+        c: Tree = {}
+        if kinds[i] == ATTN:
+            if collect_cache:
+                h, (k, v) = attn_sublayer_seq(
+                    p, h, cfg, causal=causal, positions=positions,
+                    window=window, use_rope=use_rope, return_kv=True)
+                c["k"], c["v"] = k, v
+            else:
+                h = attn_sublayer_seq(p, h, cfg, causal=causal,
+                                      positions=positions, window=window,
+                                      use_rope=use_rope)
+        else:
+            if collect_cache:
+                h, tails = mamba_sublayer_seq(p, h, cfg, return_state=True)
+                c.update(tails)
+            else:
+                h = mamba_sublayer_seq(p, h, cfg)
+        if enc_out is not None:
+            if collect_cache:
+                h, (xk, xv) = cross_attn_seq(p, h, enc_out, cfg, return_kv=True)
+                c["xk"], c["xv"] = xk, xv
+            else:
+                h = cross_attn_seq(p, h, enc_out, cfg)
+        h, aux = _ffn_sublayer(p, h, cfg, moe_mask[i])
+        aux_total = aux_total + aux
+        cache_out[f"sub{i}"] = c
+    return h, aux_total, cache_out
+
+
+def block_decode(cfg: ModelConfig, blk_params: Tree, h: jax.Array,
+                 layers_cache: Tree, blk_idx: jax.Array, pos: jax.Array, *,
+                 window: Optional[int]) -> Tuple[jax.Array, jax.Array, Tree]:
+    """One-token step through one repeating block. h: (b, d).
+
+    `layers_cache` holds the FULL stacked cache (leading dim = num_blocks)
+    and is updated in place at `blk_idx` — it is threaded through the layer
+    scan as a CARRY, so the while loop keeps one aliased buffer and each
+    step writes only the one-token slice (scanning the cache as xs/ys
+    instead would physically copy the entire cache every decode step —
+    observed as ~200GB/step of copies on the 12B decode lowering).
+    """
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    period = block_period(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    use_rope = True
+    layers_cache = dict(layers_cache)
+    for i in range(period):
+        p = blk_params[f"sub{i}"]
+        c = dict(layers_cache[f"sub{i}"])
+        if kinds[i] == ATTN:
+            x = rmsnorm(h, p["norm"], cfg.norm_eps)
+            q, k, v = _attn_proj_qkv(p, x[:, None, :], cfg)
+            q4 = _split_heads(q[:, 0], cfg.num_heads)
+            k4 = _split_heads(k[:, 0], cfg.num_kv_heads)
+            if use_rope:
+                q4 = rope(q4, pos, cfg.rope_theta)
+                k4 = rope(k4, pos, cfg.rope_theta)
+            S = c["k"].shape[2]
+            slot = (pos % S) if window is not None else pos
+            zero = jnp.zeros((), slot.dtype)
+            # read the OLD cache slice, attend with the new token passed
+            # explicitly, and write the one-token update afterwards — the
+            # carried buffer is never read after being written in-body.
+            k_cache = lax.dynamic_index_in_dim(c["k"], blk_idx, 0,
+                                               keepdims=False)
+            v_cache = lax.dynamic_index_in_dim(c["v"], blk_idx, 0,
+                                               keepdims=False)
+            k_flat = _merge_heads(k4)
+            v_flat = v[:, 0]
+            o = attention_decode(q4, k_cache, v_cache, cfg.num_kv_heads,
+                                 pos, window=window,
+                                 k_new=k_flat, v_new=v_flat)
+            c["k"] = lax.dynamic_update_slice(
+                c["k"], k_flat[None, :, None, :], (blk_idx, zero, slot, zero))
+            c["v"] = lax.dynamic_update_slice(
+                c["v"], v_flat[None, :, None, :], (blk_idx, zero, slot, zero))
+            h = h + _merge_heads(o) @ p["wo"]
+        else:
+            mc_in = {k2: lax.dynamic_index_in_dim(v2, blk_idx, 0, False)
+                     for k2, v2 in c.items() if k2.startswith(("conv", "state"))}
+            h, mc = mamba_sublayer_step(p, h, mc_in, cfg)
+            for k2, v2 in mc.items():
+                c[k2] = lax.dynamic_update_slice_in_dim(
+                    c[k2], v2.astype(c[k2].dtype)[None], blk_idx, axis=0)
+        if cfg.is_encoder_decoder:
+            x = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+            q4 = _split_heads(x @ p["wqx"], cfg.num_heads)
+            xk = lax.dynamic_index_in_dim(c["xk"], blk_idx, 0, False)
+            xv = lax.dynamic_index_in_dim(c["xv"], blk_idx, 0, False)
+            o = attention_decode(q4, xk, xv, cfg.num_kv_heads,
+                                 jnp.asarray(xk.shape[1]), window=None)
+            h = h + _merge_heads(o) @ p["wox"]
+        h2, aux = _ffn_sublayer(p, h[:, None, :], cfg, moe_mask[i])
+        h = h2[:, 0]
+        aux_total = aux_total + aux
+        layers_cache[f"sub{i}"] = c
+    return h, aux_total, layers_cache
+
+
+# ---------------------------------------------------------------- encoder
+
+def encoder_forward(cfg: ModelConfig, params: Tree,
+                    frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings (b, enc_seq, d)."""
+    enc = params["encoder"]
+    h = frames + enc["pos_embed"].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    @jax.checkpoint
+    def body(hh, blkp):
+        hh = attn_sublayer_seq(blkp, hh, cfg, causal=False,
+                               positions=positions, window=None,
+                               use_rope=False)
+        hh, _ = _ffn_sublayer(blkp, hh, cfg, False)
+        return hh, None
+
+    h, _ = lax.scan(body, h, enc["blocks"]["sub0"])
+    return rmsnorm(h, enc["final_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------- full fwd
+
+def _embed_inputs(cfg: ModelConfig, params: Tree, batch: Tree) -> jax.Array:
+    if "embeds" in batch:          # VLM stub frontend: embeddings come in
+        return batch["embeds"]
+    return params["embed"][batch["tokens"]].astype(params["embed"].dtype)
+
+
+def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
+                collect_cache: bool, remat: bool,
+                window: Optional[int] = None
+                ) -> Tuple[jax.Array, jax.Array, Optional[Tree]]:
+    """Shared train/prefill path. Returns (hidden (b,s,d), aux, cache|None)."""
+    h = _embed_inputs(cfg, params, batch)
+    s = h.shape[1]
+    positions = jnp.arange(s)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encoder_forward(cfg, params, batch["frames"])
+
+    h = constrain(h, ("batch", "seq_act", None))
+
+    def body(carry, blkp):
+        hh, aux = carry
+        hh, a, cache = block_seq(cfg, blkp, hh, positions=positions,
+                                 causal=True, window=window, enc_out=enc_out,
+                                 collect_cache=collect_cache)
+        hh = constrain(hh, ("batch", "seq_act", None))
+        return (hh, aux + a), cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    (h, aux), caches = lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params["blocks"],
+    )
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux, (caches if collect_cache else None)
+
+
+def lm_logits(cfg: ModelConfig, params: Tree, h: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ w.astype(h.dtype)
+
+
+def chunked_loss(cfg: ModelConfig, params: Tree, h: jax.Array,
+                 labels: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over seq chunks — never materializes (b,s,vocab)."""
+    b, s, d = h.shape
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if s % chunk != 0 or s <= chunk:
+        logits = (h @ w.astype(h.dtype))
+        return _xent(logits, labels)
+    nc = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(tot, inp):
+        hh, ll = inp
+        # NOTE: do NOT seq-shard here — the vocab dim must claim `model`
+        # (otherwise the lm_head gradient is gathered to full size).
+        hh = constrain(hh, ("batch", None, None))
+        logits = constrain(hh @ w.astype(hh.dtype),
+                           ("batch", None, "vocab"))
+        return tot + _xent(logits, ll) * (chunk / s), None
+
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def forward_train(cfg: ModelConfig, params: Tree, batch: Tree,
+                  remat: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    h, aux, _ = forward_seq(cfg, params, batch, collect_cache=False,
+                            remat=remat)
+    loss = chunked_loss(cfg, params, h, batch["labels"])
+    return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
+                    window: Optional[int] = None,
+                    last_index: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Tree]:
+    """Returns (first generated token (b,), decode cache).
+
+    `last_index` (b,) selects each row's final prompt position for ragged
+    right-padded batches (default: the last column)."""
+    h, _, caches = forward_seq(cfg, params, batch, collect_cache=True,
+                               remat=False, window=window)
+    if last_index is None:
+        h_last = h[:, -1, :]
+    else:
+        h_last = jnp.take_along_axis(
+            h, last_index[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = lm_logits(cfg, params, h_last)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    s = h.shape[1]
+    cache = {"layers": caches, "pos": jnp.asarray(s, jnp.int32)}
+    return first, cache
+
+
+def forward_decode(cfg: ModelConfig, params: Tree, cache: Tree,
+                   tokens: jax.Array, *, window: Optional[int] = None
+                   ) -> Tuple[jax.Array, Tree]:
+    """One decode step. tokens: (b,) int32. Returns (next (b,), new cache)."""
+    pos = cache["pos"]
+    h = params["embed"][tokens].astype(params["embed"].dtype)
+    h = constrain(h, ("batch", None))
+    nblk = num_blocks(cfg)
+
+    def body(carry, xs):
+        hh, layers = carry
+        blkp, idx = xs
+        hh, _, layers = block_decode(cfg, blkp, hh, layers, idx, pos,
+                                     window=window)
+        hh = constrain(hh, ("batch", None))
+        return (hh, layers), None
+
+    (h, new_layers), _ = lax.scan(
+        body, (h, cache["layers"]), (params["blocks"], jnp.arange(nblk)))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, h)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, {"layers": new_layers, "pos": pos + 1}

@@ -1,0 +1,208 @@
+"""Parameter spec trees: one source of truth for shapes, logical axes, init.
+
+Every model parameter is described by a ParamSpec carrying its shape and
+logical axis names. From the spec tree we derive:
+  * materialized params (for CPU tests / real serving),
+  * abstract params (ShapeDtypeStruct, for the multi-pod dry-run),
+  * shardings (logical axes -> mesh axes via mode rules in
+    repro.distribution.sharding).
+
+Identical layers are stacked along a leading 'layers' axis and executed
+with lax.scan. Heterogeneous interleaves (Jamba) stack per *sub-position*
+within the repeating block: params["blocks"]["sub3"] holds the stacked
+params of every layer whose index % period == 3.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ATTN, MAMBA, ModelConfig
+
+Tree = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim (None = never sharded)
+    init: str = "normal"             # normal | zeros | ones | small_normal
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _attn_specs(cfg: ModelConfig, cross: bool = False) -> Tree:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    sfx = "x" if cross else ""
+    t: Tree = {
+        f"wq{sfx}": ParamSpec((d, qd), ("embed", "q_heads")),
+        f"wk{sfx}": ParamSpec((d, kvd), ("embed", "kv_heads")),
+        f"wv{sfx}": ParamSpec((d, kvd), ("embed", "kv_heads")),
+        f"wo{sfx}": ParamSpec((qd, d), ("q_heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        t[f"bq{sfx}"] = ParamSpec((qd,), ("q_heads",), init="zeros")
+        t[f"bk{sfx}"] = ParamSpec((kvd,), ("kv_heads",), init="zeros")
+        t[f"bv{sfx}"] = ParamSpec((kvd,), ("kv_heads",), init="zeros")
+    return t
+
+
+def _mlp_specs(d: int, ff: int) -> Tree:
+    return {
+        "w_gate": ParamSpec((d, ff), ("embed", "ff")),
+        "w_up": ParamSpec((d, ff), ("embed", "ff")),
+        "w_down": ParamSpec((ff, d), ("ff", "embed")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig) -> Tree:
+    m = cfg.moe
+    d = cfg.d_model
+    ffe = m.d_ff_expert or cfg.d_ff
+    t: Tree = {
+        "router": ParamSpec((d, m.num_experts), ("embed", None)),
+        "w_gate": ParamSpec((m.num_experts, d, ffe), ("expert", "embed", "ff")),
+        "w_up": ParamSpec((m.num_experts, d, ffe), ("expert", "embed", "ff")),
+        "w_down": ParamSpec((m.num_experts, ffe, d), ("expert", "ff", "embed")),
+    }
+    if m.num_shared_experts:
+        sff = m.num_shared_experts * ffe
+        t["shared"] = _mlp_specs(d, sff)
+    return t
+
+
+def _mamba_specs(cfg: ModelConfig) -> Tree:
+    s = cfg.ssm_cfg
+    d = cfg.d_model
+    d_in = s.expand * d
+    gn = s.n_groups * s.d_state
+    nh = d_in // s.head_dim
+    k = s.conv_kernel
+    return {
+        "w_z": ParamSpec((d, d_in), ("embed", "d_inner")),
+        "w_x": ParamSpec((d, d_in), ("embed", "d_inner")),
+        "w_b": ParamSpec((d, gn), ("embed", None)),
+        "w_c": ParamSpec((d, gn), ("embed", None)),
+        "w_dt": ParamSpec((d, nh), ("embed", None)),
+        "conv_x": ParamSpec((d_in, k), ("d_inner", None), init="small_normal"),
+        "conv_b": ParamSpec((gn, k), (None, None), init="small_normal"),
+        "conv_c": ParamSpec((gn, k), (None, None), init="small_normal"),
+        "a_log": ParamSpec((nh,), (None,), init="ones"),
+        "d_skip": ParamSpec((nh,), (None,), init="ones"),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "norm_g": ParamSpec((d_in,), ("d_inner",), init="ones"),
+        "w_out": ParamSpec((d_in, d), ("d_inner", "embed")),
+    }
+
+
+def sublayer_specs(cfg: ModelConfig, sub: int, *, decoder: bool = True) -> Tree:
+    """Spec tree for one sub-position of the repeating block (unstacked)."""
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    kind = kinds[sub]
+    is_moe = moe_mask[sub]
+    d = cfg.d_model
+    t: Tree = {"norm": ParamSpec((d,), ("embed",), init="ones")}
+    if kind == ATTN:
+        t.update(_attn_specs(cfg))
+    else:
+        t.update(_mamba_specs(cfg))
+    if decoder and cfg.is_encoder_decoder:
+        t["norm_x"] = ParamSpec((d,), ("embed",), init="ones")
+        t.update(_attn_specs(cfg, cross=True))
+    if is_moe:
+        t["norm2"] = ParamSpec((d,), ("embed",), init="ones")
+        t["moe"] = _moe_specs(cfg)
+    elif cfg.d_ff > 0:
+        t["norm2"] = ParamSpec((d,), ("embed",), init="ones")
+        t["mlp"] = _mlp_specs(d, cfg.d_ff)
+    return t
+
+
+def block_period(cfg: ModelConfig) -> int:
+    p = len(cfg.layer_block)
+    if cfg.moe is not None and cfg.moe.layout == "every_other":
+        p = (p * 2) // math.gcd(p, 2)
+    if cfg.num_layers % p != 0:
+        raise ValueError(f"{cfg.name}: num_layers {cfg.num_layers} % period {p} != 0")
+    return p
+
+
+def num_blocks(cfg: ModelConfig) -> int:
+    return cfg.num_layers // block_period(cfg)
+
+
+def _stack(tree: Tree, n: int) -> Tree:
+    """Add leading 'layers' axis of size n to every spec leaf."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    period = block_period(cfg)
+    nblk = num_blocks(cfg)
+    t: Tree = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed")),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "blocks": {
+            f"sub{i}": _stack(sublayer_specs(cfg, i), nblk) for i in range(period)
+        },
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamSpec((d, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.is_encoder_decoder:
+        enc_sub: Tree = {"norm": ParamSpec((d,), ("embed",), init="ones")}
+        enc_sub.update(_attn_specs(cfg))
+        enc_sub["norm2"] = ParamSpec((d,), ("embed",), init="ones")
+        enc_sub["mlp"] = _mlp_specs(d, cfg.d_ff)
+        t["encoder"] = {
+            "blocks": {"sub0": _stack(enc_sub, cfg.encoder_layers)},
+            "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+            "pos_embed": ParamSpec((cfg.encoder_seq, d), (None, "embed")),
+        }
+    return t
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32) -> Tree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), param_specs(cfg),
+        is_leaf=_is_spec)
+
+
+def param_axes(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(lambda s: s.axes, param_specs(cfg), is_leaf=_is_spec)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> Tree:
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        scale = s.scale if s.init == "normal" else s.scale * 0.5
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_count_actual(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))

@@ -1,0 +1,94 @@
+"""Step functions lowered by the launcher / dry-run and used by examples.
+
+  * train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+  * prefill_step(params, batch) -> (first_token, cache)
+  * serve_step(params, cache, tokens) -> (next_token, cache)     [ONE token]
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.ctx import sharding_ctx
+from repro.models.config import LONG_CONTEXT_WINDOW, ModelConfig, ShapeConfig
+from repro.models.modeling import forward_decode, forward_prefill, forward_train
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+Tree = Dict[str, Any]
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding-window policy: long_500k on attention archs uses the
+    ring-buffer windowed variant (sub-quadratic); everything else is full."""
+    if shape.kind != "decode":
+        return None
+    if shape.seq_len > 131072 and not cfg.attn_free:
+        return min(LONG_CONTEXT_WINDOW, shape.seq_len)
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, shape.seq_len)
+    return None
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig = AdamWConfig(),
+                    remat: bool = True, mesh=None, microbatches: int = 1):
+    """microbatches > 1 enables gradient accumulation: the global batch is
+    processed in M sequential slices, dividing activation transients and the
+    remat carry stack by M at the cost of M smaller collectives."""
+
+    def grads_of(params: Tree, batch: Tree):
+        def loss_fn(p):
+            return forward_train(cfg, p, batch, remat=remat)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params: Tree, opt_state: Tree, batch: Tree):
+        with sharding_ctx(mesh):
+            if microbatches <= 1:
+                (loss, metrics), grads = grads_of(params, batch)
+            else:
+                def resh(x):
+                    b = x.shape[0]
+                    assert b % microbatches == 0, (b, microbatches)
+                    return x.reshape((microbatches, b // microbatches)
+                                     + x.shape[1:])
+
+                mb = jax.tree.map(resh, batch)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(acc, mbatch):
+                    (loss, metrics), g = grads_of(params, mbatch)
+                    acc = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), acc, g)
+                    return acc, (loss, metrics)
+
+                grads, (losses, metricses) = jax.lax.scan(body, g0, mb)
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+                loss = jnp.mean(losses)
+                metrics = jax.tree.map(jnp.mean, metricses)
+            new_params, new_opt, gnorm = adamw_update(
+                params, grads, opt_state, opt)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, window: Optional[int] = None,
+                      mesh=None, act_rules=None):
+    def prefill_step(params: Tree, batch: Tree):
+        with sharding_ctx(mesh, act_rules):
+            return forward_prefill(cfg, params, batch, window=window)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, window: Optional[int] = None,
+                    mesh=None):
+    def serve_step(params: Tree, cache: Tree, tokens: jax.Array):
+        with sharding_ctx(mesh):
+            return forward_decode(cfg, params, cache, tokens, window=window)
+
+    return serve_step

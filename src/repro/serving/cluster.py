@@ -1,0 +1,200 @@
+"""In-process mini-cluster: the REAL data path, end to end.
+
+Gateway (on-demand rejection forwarding) -> PrefillEngine (real forward)
+-> block-free KVCache transfer between actual paged pools (Pallas
+gather/RecvScatter) -> DecodeEngine (paged continuous batching) ->
+streamed tokens. Used by examples/ and the integration tests; cluster-SCALE
+behavior is the discrete-event simulator's job (repro.core.cluster_sim).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.transfer import KVTransferEngine, LinkModel
+from repro.core.zookeeper import MetaStore
+from repro.models.config import ModelConfig
+from repro.models.params import init_params
+from repro.serving.engine import DecodeEngine, PrefillEngine, PrefillOutput
+from repro.serving.kvcache import PagedKVPool
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    tokens: List[int]
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    on_token: Optional[Callable[[int], None]] = None  # SSE stream
+    frames: Optional[object] = None  # enc-dec: stub frontend embeddings
+
+
+class PrefillNode:
+    def __init__(self, iid: str, cfg: ModelConfig, params, *,
+                 num_blocks: int = 128, block_size: int = 16,
+                 batch_size: int = 4):
+        self.iid = iid
+        self.engine = PrefillEngine(cfg, params)
+        self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
+                                block_size=block_size)
+        self.batch_size = batch_size
+        self.forming: List[ServeRequest] = []
+        self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
+        self.sse_connections = 0
+
+    def idle(self) -> bool:
+        return (len(self.forming) < self.batch_size
+                and len(self.waiting) < self.batch_size)
+
+    def offer(self, req: ServeRequest) -> bool:
+        if not self.idle():
+            return False
+        self.forming.append(req)
+        self.sse_connections += 1
+        return True
+
+    def run_batch(self) -> List[Tuple[ServeRequest, PrefillOutput]]:
+        if not self.forming:
+            return []
+        batch = self.forming
+        self.forming = []
+        frames = ([r.frames for r in batch]
+                  if batch and batch[0].frames is not None else None)
+        outs = self.engine.run([r.tokens for r in batch], frames=frames)
+        ready = []
+        for req, out in zip(batch, outs):
+            req.generated.append(out.first_token)
+            if req.on_token:
+                req.on_token(out.first_token)
+            if out.k is not None:
+                blocks = self.pool.alloc(req.rid, out.prompt_len)
+                self.pool.write_prefill(blocks, out.k, out.v)
+            ready.append((req, out))
+        self.waiting.extend(ready)
+        return ready
+
+
+class DecodeNode:
+    def __init__(self, iid: str, cfg: ModelConfig, params, *,
+                 num_blocks: int = 256, block_size: int = 16,
+                 max_slots: int = 8):
+        self.iid = iid
+        self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
+                                block_size=block_size)
+        self.engine = DecodeEngine(cfg, params, self.pool,
+                                   max_slots=max_slots)
+        self.requests: Dict[int, ServeRequest] = {}
+
+    def can_admit(self) -> bool:
+        return bool(self.engine.free_slots())
+
+    def admit(self, req: ServeRequest, out: PrefillOutput,
+              src_pool: PagedKVPool, xfer: KVTransferEngine,
+              *, mode: str = "block_free"):
+        # allocate room for prompt + all new tokens, move KV block-free
+        total = out.prompt_len + req.max_new_tokens + 1
+        dst_blocks = self.pool.alloc(req.rid, total)
+        if out.k is not None:
+            src_blocks = src_pool.owned(req.rid)
+            n = len(src_blocks)
+            if mode == "block_free":
+                xfer.transfer_block_free(src_pool, src_blocks, self.pool,
+                                         dst_blocks[:n])
+            else:
+                xfer.transfer_block_fixed(src_pool, src_blocks, self.pool,
+                                          dst_blocks[:n])
+            src_pool.release(req.rid)
+        self.engine.admit(req.rid, out, self.pool.owned(req.rid))
+        self.requests[req.rid] = req
+
+    def step(self):
+        res = self.engine.step()
+        for slot, tok in res.items():
+            rid = self.engine.rid[slot]
+            req = self.requests[rid]
+            req.generated.append(tok)
+            if req.on_token:
+                req.on_token(tok)
+            if len(req.generated) >= req.max_new_tokens + 1:
+                req.done = True
+                self.engine.evict(slot)
+                self.pool.release(rid)
+                del self.requests[rid]
+
+
+class MiniCluster:
+    """One P/D group with real compute, stepped synchronously."""
+
+    def __init__(self, cfg: ModelConfig, *, n_prefill: int = 1,
+                 n_decode: int = 1, seed: int = 0,
+                 transfer_mode: str = "block_free",
+                 params=None, link: LinkModel = LinkModel()):
+        self.cfg = cfg
+        if params is None:
+            params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.meta = MetaStore()
+        self.meta.register_group("g0", "default")
+        self.prefills = [PrefillNode(f"P{i}", cfg, params)
+                         for i in range(n_prefill)]
+        self.decodes = [DecodeNode(f"D{i}", cfg, params)
+                        for i in range(n_decode)]
+        for p in self.prefills:
+            self.meta.gather_instance(0.0, p.iid, "P", "g0")
+        for d in self.decodes:
+            self.meta.gather_instance(0.0, d.iid, "D", "g0")
+        self.xfer = KVTransferEngine(link, seed=seed)
+        self.transfer_mode = transfer_mode
+        self.pending: List[ServeRequest] = []
+        self.rejections = 0
+
+    # ---------------------------------------------------------- ingress
+    def submit(self, req: ServeRequest):
+        self.pending.append(req)
+
+    # ------------------------------------------------------------- tick
+    def tick(self):
+        # 1. gateway: on-demand forwarding, least-SSE first, retries
+        still: List[ServeRequest] = []
+        for req in self.pending:
+            placed = False
+            for p in sorted(self.prefills, key=lambda x: x.sse_connections):
+                if p.offer(req):
+                    placed = True
+                    break
+                self.rejections += 1
+            if not placed:
+                still.append(req)   # waits at the gateway
+        self.pending = still
+        # 2. prefill batches
+        for p in self.prefills:
+            p.run_batch()
+        # 3. transfer to decode (async retrieval, least-loaded decode)
+        for p in self.prefills:
+            remaining = []
+            for req, out in p.waiting:
+                tgt = min((d for d in self.decodes if d.can_admit()),
+                          key=lambda d: len(d.requests), default=None)
+                if tgt is None:
+                    remaining.append((req, out))
+                    continue
+                tgt.admit(req, out, p.pool, self.xfer,
+                          mode=self.transfer_mode)
+                p.sse_connections -= 1
+            p.waiting = remaining
+        # 4. decode iteration
+        for d in self.decodes:
+            d.step()
+
+    def run(self, requests: Sequence[ServeRequest], *,
+            max_ticks: int = 200) -> List[ServeRequest]:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_ticks):
+            self.tick()
+            if all(r.done for r in requests):
+                break
+        return list(requests)

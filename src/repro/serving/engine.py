@@ -1,0 +1,286 @@
+"""Real-compute P/D engines for the in-process mini-cluster.
+
+PrefillEngine runs actual prefill batches and writes KV into a paged pool;
+DecodeEngine runs continuous-batched paged decode (paged_attention kernel
+for attention layers, dense recurrent states for mamba layers, dense
+cross-attention KV for encoder-decoder archs). All assigned families are
+supported: dense / moe / ssm / hybrid / vlm-backbone / audio (enc-dec).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.config import ATTN, ModelConfig
+from repro.models.modeling import (
+    _attn_proj_qkv, _ffn_sublayer, _merge_heads, _split_heads, lm_logits,
+    rmsnorm, rope, forward_prefill, mamba_sublayer_step)
+from repro.models.params import block_period, num_blocks
+from repro.serving.kvcache import PagedKVPool
+
+Tree = dict
+
+
+def _attn_layer_order(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    """(blk, sub) pairs of attention layers, in network order."""
+    period = block_period(cfg)
+    kinds = cfg.layer_kinds()
+    return [(b, s) for b in range(num_blocks(cfg)) for s in range(period)
+            if kinds[s] == ATTN]
+
+
+def _mamba_layer_order(cfg: ModelConfig) -> List[Tuple[int, int]]:
+    period = block_period(cfg)
+    kinds = cfg.layer_kinds()
+    return [(b, s) for b in range(num_blocks(cfg)) for s in range(period)
+            if kinds[s] != ATTN]
+
+
+def _slice_layer(params_sub: Tree, blk: int) -> Tree:
+    return jax.tree.map(lambda x: x[blk], params_sub)
+
+
+@dataclass
+class PrefillOutput:
+    first_token: int
+    k: Optional[jax.Array]           # (attn_layers, tokens, kv_dim)
+    v: Optional[jax.Array]
+    mamba_state: Optional[Tree]      # per (blk,sub): conv/state tensors
+    prompt_len: int
+    cross: Optional[Tree] = None     # enc-dec: (blk,sub) -> (xk, xv)
+
+
+class PrefillEngine:
+    """Batched prefill on real params; emits per-request KV + states
+    (+ cross-attention KV for encoder-decoder archs)."""
+
+    def __init__(self, cfg: ModelConfig, params: Tree):
+        self.cfg = cfg
+        self.params = params
+        self._attn_order = _attn_layer_order(cfg)
+        self._mamba_order = _mamba_layer_order(cfg)
+
+    def run(self, token_lists: Sequence[Sequence[int]],
+            frames: Optional[Sequence] = None) -> List[PrefillOutput]:
+        """Ragged batches are split into equal-length sub-batches: causal
+        attention ignores right padding, but SSM/conv states would absorb
+        padded tokens (observed as hybrid-arch divergence)."""
+        by_len: Dict[int, List[int]] = {}
+        for i, t in enumerate(token_lists):
+            by_len.setdefault(len(t), []).append(i)
+        outs: List[Optional[PrefillOutput]] = [None] * len(token_lists)
+        for ln, idxs in by_len.items():
+            sub = self._run_equal(
+                [token_lists[i] for i in idxs],
+                [frames[i] for i in idxs] if frames is not None else None)
+            for i, o in zip(idxs, sub):
+                outs[i] = o
+        return outs  # type: ignore[return-value]
+
+    def _run_equal(self, token_lists: Sequence[Sequence[int]],
+                   frames: Optional[Sequence] = None
+                   ) -> List[PrefillOutput]:
+        cfg = self.cfg
+        b = len(token_lists)
+        lens = [len(t) for t in token_lists]
+        s = max(lens)
+        toks = np.zeros((b, s), np.int32)
+        for i, t in enumerate(token_lists):
+            toks[i, :len(t)] = t
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.is_encoder_decoder:
+            assert frames is not None, "enc-dec prefill needs frames"
+            batch["frames"] = jnp.stack([jnp.asarray(f) for f in frames])
+        first, cache = forward_prefill(
+            cfg, self.params, batch,
+            last_index=jnp.asarray([ln - 1 for ln in lens]))
+        outs: List[PrefillOutput] = []
+        layers = cache["layers"]
+        for i, ln in enumerate(lens):
+            if self._attn_order:
+                k = jnp.stack([layers[f"sub{sb}"]["k"][bk, i, :ln]
+                               for bk, sb in self._attn_order])
+                v = jnp.stack([layers[f"sub{sb}"]["v"][bk, i, :ln]
+                               for bk, sb in self._attn_order])
+            else:
+                k = v = None
+            mstate: Tree = {}
+            for bk, sb in self._mamba_order:
+                c = layers[f"sub{sb}"]
+                mstate[(bk, sb)] = {
+                    "conv_x": c["conv_x"][bk, i],
+                    "conv_b": c["conv_b"][bk, i],
+                    "conv_c": c["conv_c"][bk, i],
+                    "state": c["state"][bk, i],
+                }
+            cross: Optional[Tree] = None
+            if cfg.is_encoder_decoder:
+                cross = {}
+                from repro.models.params import block_period, num_blocks
+                for bk in range(num_blocks(cfg)):
+                    for sb in range(block_period(cfg)):
+                        c = layers[f"sub{sb}"]
+                        cross[(bk, sb)] = (c["xk"][bk, i], c["xv"][bk, i])
+            outs.append(PrefillOutput(int(first[i]), k, v, mstate, ln,
+                                      cross))
+        return outs
+
+
+class DecodeEngine:
+    """Continuous-batched paged decode over a PagedKVPool."""
+
+    def __init__(self, cfg: ModelConfig, params: Tree, pool: PagedKVPool,
+                 *, max_slots: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool
+        self.max_slots = max_slots
+        self._attn_order = _attn_layer_order(cfg)
+        self._mamba_order = _mamba_layer_order(cfg)
+        # slot state
+        self.rid = [None] * max_slots
+        self.pos = np.zeros(max_slots, np.int64)      # tokens so far
+        self.last_tok = np.zeros(max_slots, np.int32)
+        s_cfg = cfg.ssm
+        self._cross_slots: Dict[Tuple[int, int], Tuple] = {}
+        if cfg.is_encoder_decoder:
+            from repro.models.params import block_period, num_blocks
+            for bk in range(num_blocks(cfg)):
+                for sb in range(block_period(cfg)):
+                    self._cross_slots[(bk, sb)] = (
+                        jnp.zeros((max_slots, cfg.encoder_seq, cfg.kv_dim)),
+                        jnp.zeros((max_slots, cfg.encoder_seq, cfg.kv_dim)))
+        self._mamba_slots: Dict[Tuple[int, int], Tree] = {}
+        if self._mamba_order:
+            d_in = s_cfg.expand * cfg.d_model
+            gn = s_cfg.n_groups * s_cfg.d_state
+            nh = d_in // s_cfg.head_dim
+            kk = s_cfg.conv_kernel
+            for key in self._mamba_order:
+                self._mamba_slots[key] = {
+                    "conv_x": jnp.zeros((max_slots, d_in, kk - 1)),
+                    "conv_b": jnp.zeros((max_slots, gn, kk - 1)),
+                    "conv_c": jnp.zeros((max_slots, gn, kk - 1)),
+                    "state": jnp.zeros((max_slots, nh, s_cfg.d_state,
+                                        s_cfg.head_dim)),
+                }
+
+    # ------------------------------------------------------------- slots
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.rid) if r is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.rid) if r is not None]
+
+    def admit(self, rid: int, out: PrefillOutput, blocks: Sequence[int],
+              slot: Optional[int] = None) -> int:
+        """Attach a transferred request to a free slot. The KV for its
+        prompt must already be in `self.pool` under `blocks`."""
+        if slot is None:
+            free = self.free_slots()
+            if not free:
+                raise RuntimeError("no free decode slot")
+            slot = free[0]
+        self.rid[slot] = rid
+        self.pos[slot] = out.prompt_len
+        self.last_tok[slot] = out.first_token
+        for key, st in (out.mamba_state or {}).items():
+            buf = self._mamba_slots[key]
+            for k2 in buf:
+                buf[k2] = buf[k2].at[slot].set(st[k2].astype(buf[k2].dtype))
+        for key, (xk, xv) in (out.cross or {}).items():
+            bk_, bv_ = self._cross_slots[key]
+            self._cross_slots[key] = (
+                bk_.at[slot].set(xk.astype(bk_.dtype)),
+                bv_.at[slot].set(xv.astype(bv_.dtype)))
+        return slot
+
+    def evict(self, slot: int):
+        self.rid[slot] = None
+
+    # -------------------------------------------------------------- step
+    def step(self) -> Dict[int, int]:
+        """One decode iteration over all active slots.
+        Returns {slot: next_token}."""
+        cfg = self.cfg
+        act = self.active_slots()
+        if not act:
+            return {}
+        act_arr = np.asarray(act)
+        toks = jnp.asarray(self.last_tok[act_arr])
+        pos = jnp.asarray(self.pos[act_arr])          # tokens so far
+        h = self.params["embed"][toks].astype(jnp.float32)
+        period = block_period(cfg)
+        kinds = cfg.layer_kinds()
+        moe_mask = cfg.moe_layer_mask()
+        attn_idx = {pair: i for i, pair in enumerate(self._attn_order)}
+        # block tables sized to the largest allocation among active slots
+        nblocks = max(len(self.pool.owned(self.rid[s])) for s in act)
+        bt = jnp.asarray(self.pool.block_tables(
+            [self.rid[s] for s in act], nblocks))
+        lens = pos + 1                                 # incl. current token
+
+        for bk in range(num_blocks(cfg)):
+            for sb in range(period):
+                p = _slice_layer(self.params["blocks"][f"sub{sb}"], bk)
+                if kinds[sb] == ATTN:
+                    li = attn_idx[(bk, sb)]
+                    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+                    q, k, v = _attn_proj_qkv(p, x[:, None, :], cfg)
+                    q4 = _split_heads(q[:, 0], cfg.num_heads)
+                    k4 = _split_heads(k[:, 0], cfg.num_kv_heads)
+                    q4 = rope(q4, pos, cfg.rope_theta)
+                    k4 = rope(k4, pos, cfg.rope_theta)
+                    kf, vf = _merge_heads(k4), v[:, 0]
+                    # write the token into the pool at (block, offset)
+                    blk_ids, offs = [], []
+                    for s_i in act:
+                        bl = self.pool.owned(self.rid[s_i])
+                        t = int(self.pos[s_i])
+                        blk_ids.append(bl[t // self.pool.block_size])
+                        offs.append(t % self.pool.block_size)
+                    kv_tok = jnp.concatenate([kf, vf], -1).astype(
+                        self.pool.dtype)
+                    st = self.pool.storage.at[
+                        li, jnp.asarray(blk_ids), jnp.asarray(offs)
+                    ].set(kv_tok)
+                    self.pool.storage = st
+                    o = ops.paged_attention(
+                        q4.astype(self.pool.dtype),
+                        self.pool.storage[li], bt,
+                        lens.astype(jnp.int32))
+                    h = h + _merge_heads(o).astype(h.dtype) @ p["wo"]
+                else:
+                    buf = self._mamba_slots[(bk, sb)]
+                    cin = {k2: v2[act_arr] for k2, v2 in buf.items()}
+                    h, nc = mamba_sublayer_step(p, h, cin, cfg)
+                    for k2 in buf:
+                        buf[k2] = buf[k2].at[act_arr].set(
+                            nc[k2].astype(buf[k2].dtype))
+                if cfg.is_encoder_decoder:
+                    from repro.models.modeling import attention_decode
+                    xk, xv = self._cross_slots[(bk, sb)]
+                    x = rmsnorm(h, p["norm_x"], cfg.norm_eps)
+                    q4 = _split_heads(x @ p["wqx"], cfg.num_heads)
+                    o = attention_decode(
+                        q4.astype(jnp.float32), xk[act_arr], xv[act_arr],
+                        cfg.num_kv_heads,
+                        jnp.asarray(cfg.encoder_seq), window=None)
+                    h = h + _merge_heads(o).astype(h.dtype) @ p["wox"]
+                h2, _ = _ffn_sublayer(p, h[:, None, :], cfg, moe_mask[sb])
+                h = h2[:, 0]
+        h = rmsnorm(h, self.params["final_norm"], cfg.norm_eps)
+        logits = lm_logits(cfg, self.params, h)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        out: Dict[int, int] = {}
+        for j, s_i in enumerate(act):
+            self.pos[s_i] += 1
+            self.last_tok[s_i] = nxt[j]
+            out[s_i] = int(nxt[j])
+        return out

@@ -1,0 +1,151 @@
+"""Paged KV pool (PageAttention-style, paper §2.2.3).
+
+Storage layout: (layers, num_blocks, block_size, width) where width packs
+K and V (2 * kv_dim) — flat bytes per (layer, block), which is exactly what
+the block-free transfer path linearizes.
+
+The gather (blocks -> contiguous) and scatter (contiguous -> blocks) hot
+paths go through the Pallas kernels in repro.kernels (interpret mode on
+CPU), with a pure-jnp fallback.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+class PoolExhausted(RuntimeError):
+    pass
+
+
+class PagedKVPool:
+    def __init__(self, cfg: ModelConfig, *, num_blocks: int,
+                 block_size: int = 16, dtype=jnp.float32,
+                 use_kernels: bool = True):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.width = 2 * cfg.kv_dim                  # K ++ V
+        self.layers = cfg.num_layers if not cfg.attn_free else 0
+        n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+        self.attn_layers = n_attn
+        self.dtype = dtype
+        self.use_kernels = use_kernels
+        self.storage = jnp.zeros(
+            (max(n_attn, 1), num_blocks, block_size, self.width), dtype)
+        self._free: List[int] = list(range(num_blocks))
+        self._owned: Dict[int, List[int]] = {}       # rid -> blocks
+
+    # ------------------------------------------------------------- alloc
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.block_size))
+
+    def alloc(self, rid: int, tokens: int) -> List[int]:
+        n = self.blocks_for_tokens(tokens)
+        if n > len(self._free):
+            raise PoolExhausted(f"need {n} blocks, have {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(rid, []).extend(blocks)
+        return blocks
+
+    def extend(self, rid: int, extra_tokens_from: int, to_tokens: int
+               ) -> List[int]:
+        """Grow a request's allocation (decode appends)."""
+        have = self.blocks_for_tokens(extra_tokens_from)
+        need = self.blocks_for_tokens(to_tokens)
+        out = []
+        for _ in range(need - have):
+            if not self._free:
+                raise PoolExhausted("pool exhausted on extend")
+            b = self._free.pop()
+            self._owned.setdefault(rid, []).append(b)
+            out.append(b)
+        return out
+
+    def release(self, rid: int):
+        for b in self._owned.pop(rid, []):
+            self._free.append(b)
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, []))
+
+    def invariant_ok(self) -> bool:
+        owned = [b for bs in self._owned.values() for b in bs]
+        all_ids = sorted(owned + self._free)
+        return (all_ids == list(range(self.num_blocks))
+                and len(set(owned)) == len(owned))
+
+    # ---------------------------------------------------------- data I/O
+    def write_prefill(self, blocks: Sequence[int], k: jax.Array,
+                      v: jax.Array):
+        """k, v: (attn_layers, tokens, kv_dim) from forward_prefill."""
+        L, s, kvd = k.shape
+        kv = jnp.concatenate([k, v], axis=-1).astype(self.dtype)
+        pad = len(blocks) * self.block_size - s
+        if pad:
+            kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0)))
+        kv = kv.reshape(L, len(blocks), self.block_size, self.width)
+        self.storage = self.storage.at[:, jnp.asarray(blocks)].set(kv)
+
+    def append_token(self, blocks: Sequence[int], pos: int,
+                     k_tok: jax.Array, v_tok: jax.Array):
+        """k_tok, v_tok: (attn_layers, kv_dim); pos is the token index."""
+        b = blocks[pos // self.block_size]
+        off = pos % self.block_size
+        kv = jnp.concatenate([k_tok, v_tok], axis=-1).astype(self.dtype)
+        self.storage = self.storage.at[:, b, off, :].set(kv)
+
+    def read_block(self, block: int) -> jax.Array:
+        return self.storage[:, block]                # (layers, bs, width)
+
+    def write_block(self, block: int, data: jax.Array):
+        self.storage = self.storage.at[:, block].set(data.astype(self.dtype))
+
+    def read_tokens(self, blocks: Sequence[int], tokens: int) -> jax.Array:
+        """Dense (layers, tokens, width) view of a request's cache."""
+        buf = self.gather_contiguous(blocks)
+        return buf[:, :tokens]
+
+    # ----------------------------------------------- contiguous transfer
+    def gather_contiguous(self, blocks: Sequence[int]) -> jax.Array:
+        """(layers, n*block_size, width) contiguous buffer (C3 sender)."""
+        from repro.kernels import ops
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        if self.use_kernels:
+            return ops.kv_gather(self.storage, idx)
+        g = jnp.take(self.storage, idx, axis=1)
+        L, n, bs, w = g.shape
+        return g.reshape(L, n * bs, w)
+
+    def scatter_contiguous(self, buf: jax.Array, blocks: Sequence[int]):
+        """RecvScatter: restore discrete blocks from bytes (C3 receiver)."""
+        from repro.kernels import ops
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        if self.use_kernels:
+            self.storage = ops.kv_scatter(self.storage, buf.astype(self.dtype),
+                                          idx)
+        else:
+            L, t, w = buf.shape
+            n = len(blocks)
+            self.storage = self.storage.at[:, idx].set(
+                buf.reshape(L, n, self.block_size, w).astype(self.dtype))
+
+    def block_tables(self, rids: Sequence[int], max_blocks: int
+                     ) -> np.ndarray:
+        """(len(rids), max_blocks) int32 table, -1 padded."""
+        out = np.full((len(rids), max_blocks), -1, np.int32)
+        for i, rid in enumerate(rids):
+            bs = self._owned.get(rid, [])
+            out[i, :len(bs)] = bs
+        return out

@@ -1,0 +1,27 @@
+"""Token sampling policies for the decode engines.
+
+The parity tests and the paper's evaluation use greedy; temperature/top-k
+are provided for completeness of the serving substrate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 1.0,
+           top_k: Optional[int] = None) -> jax.Array:
+    """logits: (..., vocab). temperature <= 0 falls back to greedy."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    l32 = logits.astype(jnp.float32) / temperature
+    if top_k is not None and top_k > 0 and top_k < l32.shape[-1]:
+        kth = jnp.sort(l32, axis=-1)[..., -top_k][..., None]
+        l32 = jnp.where(l32 < kth, -1e30, l32)
+    return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)

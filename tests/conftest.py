@@ -1,0 +1,34 @@
+import os
+import sys
+
+# deterministic, single real device (the dry-run sets its own flags in a
+# separate process; tests must see 1 CPU device)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import ALIASES, get_config  # noqa: E402
+from repro.models.params import init_params  # noqa: E402
+
+ALL_ARCHS = sorted(ALIASES)
+DECODER_ARCHS = [a for a in ALL_ARCHS if a != "whisper-base"]
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+_param_cache = {}
+
+
+def reduced_params(arch: str):
+    """Session-cached (cfg, params) for a reduced arch."""
+    if arch not in _param_cache:
+        cfg = get_config(arch).reduced()
+        _param_cache[arch] = (cfg, init_params(cfg, jax.random.PRNGKey(7)))
+    return _param_cache[arch]

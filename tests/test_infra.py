@@ -1,0 +1,198 @@
+"""Infrastructure pieces: sharding rules (hypothesis), HLO cost model,
+checkpoint roundtrip, data determinism, caches, optimizer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from conftest import reduced_params
+from repro.checkpoint import load_params, save_params
+from repro.core.requests import WorkloadGenerator, tidal_rate
+from repro.data import SyntheticLM
+from repro.distribution.sharding import PARAM_RULES_2D, spec_from_axes
+from repro.launch.hlo_cost import analyze_text
+from repro.launch.mesh import make_test_mesh
+from repro.models.caches import cache_num_bytes, zeros_cache
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+# ------------------------------------------------------------- sharding
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@settings(max_examples=80, deadline=None)
+@given(data=st.data())
+def test_spec_from_axes_divisibility(data):
+    """Property: every mesh axis used in the spec divides its dim, no mesh
+    axis is used twice, unshardable dims fall back to None."""
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    ndim = data.draw(st.integers(1, 4))
+    dims = [data.draw(st.integers(1, 4096)) for _ in range(ndim)]
+    names = [data.draw(st.sampled_from(
+        ["embed", "ff", "vocab", "q_heads", "layers", None]))
+        for _ in range(ndim)]
+    spec = spec_from_axes(names, dims, mesh, PARAM_RULES_2D)
+    used = []
+    for dim, part in zip(dims, tuple(spec) + (None,) * (ndim - len(spec))):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+            used.append(a)
+        assert dim % prod == 0, (dims, names, spec)
+    assert len(used) == len(set(used)), spec
+
+
+def test_spec_prefers_full_2d_when_divisible():
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = spec_from_axes(("embed", "ff"), (8192, 49152), mesh,
+                          PARAM_RULES_2D)
+    assert spec == P(("pod", "data"), "model")
+
+
+# ------------------------------------------------------------- hlo cost
+def test_hlo_cost_multiplies_loops():
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((256,), jnp.float32)
+
+    def unrolled(w, x):
+        for _ in range(8):
+            x = jnp.tanh(w @ x)
+        return x
+
+    def scanned(w, x):
+        def body(c, _):
+            return jnp.tanh(w @ c), None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    f_u = analyze_text(jax.jit(unrolled).lower(w, x).compile().as_text())
+    f_s = analyze_text(jax.jit(scanned).lower(w, x).compile().as_text())
+    assert abs(f_u.flops - f_s.flops) / f_u.flops < 0.05
+    assert f_s.flops > 8 * 2 * 256 * 256 * 0.9
+
+
+# ----------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, params = reduced_params("minicpm-2b")
+    path = str(tmp_path / "ckpt.npz")
+    save_params(path, params, step=7)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    back = load_params(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------ data
+def test_data_is_deterministic_and_shardable():
+    d1 = SyntheticLM(512, 32, 8, seed=3)
+    d2 = SyntheticLM(512, 32, 8, seed=3)
+    b1, b2 = d1.batch(5), d2.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # different steps differ
+    assert not np.array_equal(d1.batch(6)["tokens"], b1["tokens"])
+
+
+def test_workload_scenarios_share_prefixes():
+    gen = WorkloadGenerator(base_rps=50, seed=0)
+    reqs = gen.arrivals(20.0)
+    by_prefix = {}
+    for r in reqs:
+        by_prefix.setdefault(r.prefix_id, []).append(r)
+    shared = [v for v in by_prefix.values() if len(v) > 1]
+    assert shared, "prefixes must repeat across requests"
+    for grp in shared:
+        assert len({r.prefix_len for r in grp}) == 1
+
+
+def test_tidal_rate_shape():
+    base = 10.0
+    peak = tidal_rate(base, 43200.0)      # mid-day
+    trough = tidal_rate(base, 0.0)
+    assert peak > 0.9 * base and trough < 0.3 * base
+
+
+# ------------------------------------------------------------ optimizer
+def test_adamw_descends_quadratic():
+    p = {"w": jnp.asarray([3.0, -2.0])}
+    st_ = adamw_init(p)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(60):
+        g = {"w": 2 * p["w"]}
+        p, st_, _ = adamw_update(p, g, st_, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 0.3
+
+
+def test_grad_clipping_bounds_update():
+    p = {"w": jnp.zeros(4)}
+    st_ = adamw_init(p)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, _, gnorm = adamw_update(p, g, st_, cfg)
+    assert float(gnorm) > 1e5
+    assert float(jnp.abs(p2["w"]).max()) <= 1.5
+
+
+# --------------------------------------------------------------- caches
+def test_cache_bytes_accounting():
+    cfg, _ = reduced_params("granite-3-8b")
+    full = cache_num_bytes(cfg, 4, 128)
+    windowed = cache_num_bytes(cfg, 4, 128, window=32)
+    assert windowed < full
+    c = zeros_cache(cfg, 4, 128)
+    leaves = jax.tree.leaves(c)
+    assert all(bool(jnp.all(x == 0)) for x in leaves if x.ndim)
+
+
+def test_hlo_cost_dot_flops_exact():
+    """The analyzer's dot accounting matches hand math exactly."""
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    c = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    got = analyze_text(c.as_text())
+    assert got.flops == 2 * 64 * 32 * 48
+
+
+def test_hlo_cost_counts_collectives_in_loops():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # single-device mesh: no collectives expected — asserts no false
+    # positives from the parser
+    mesh = jax.sharding.Mesh(__import__("numpy").asarray(
+        jax.devices()[:1]).reshape(1), ("model",))
+
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(w @ c), None
+        return jax.lax.scan(body, x, None, length=4)[0]
+    c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "model")),
+                                 NamedSharding(mesh, P()))).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
+    got = analyze_text(c.as_text())
+    assert got.coll_bytes == 0
+    assert got.flops >= 4 * 2 * 64 * 64
+
+
+# -------------------------------------------------------------- sampling
+def test_sampling_policies():
+    from repro.serving.sampling import greedy, sample
+    key = jax.random.PRNGKey(0)
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
+    assert int(greedy(logits)[0]) == 1
+    assert int(sample(logits, key, temperature=0.0)[0]) == 1
+    # top-1 sampling is greedy regardless of temperature
+    assert int(sample(logits, key, temperature=2.0, top_k=1)[0]) == 1
+    # high-temperature samples stay within the top-k support
+    toks = [int(sample(logits, jax.random.PRNGKey(i), temperature=5.0,
+                       top_k=2)[0]) for i in range(20)]
+    assert set(toks) <= {1, 2}

@@ -1,0 +1,172 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the ref.py
+pure-jnp oracles (deliverable c), plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.kv_gather import kv_gather_pallas
+from repro.kernels.kv_scatter import kv_scatter_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+SHAPES = [
+    # (L, NB, BS, kvd)
+    (1, 4, 8, 64),
+    (3, 16, 16, 128),
+    (6, 32, 16, 256),
+    (2, 8, 4, 64),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _storage(L, NB, BS, kvd, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(L, NB, BS, 2 * kvd)), dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kv_gather_matches_ref(shape, dtype):
+    L, NB, BS, kvd = shape
+    storage = _storage(L, NB, BS, kvd, dtype)
+    rng = np.random.default_rng(1)
+    idx = jnp.asarray(rng.permutation(NB)[: NB // 2], jnp.int32)
+    got = kv_gather_pallas(storage, idx, interpret=True)
+    want = ref.kv_gather(storage, idx)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kv_scatter_matches_ref(shape, dtype):
+    L, NB, BS, kvd = shape
+    storage = _storage(L, NB, BS, kvd, dtype)
+    rng = np.random.default_rng(2)
+    n = max(1, NB // 3)
+    idx = jnp.asarray(rng.permutation(NB)[:n], jnp.int32)
+    buf = jnp.asarray(rng.normal(size=(L, n * BS, 2 * kvd)), dtype)
+    got = kv_scatter_pallas(storage, buf, idx, interpret=True)
+    want = ref.kv_scatter(storage, buf, idx)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("gqa", [1, 4])
+def test_paged_attention_matches_ref(shape, dtype, gqa):
+    L, NB, BS, kvd = shape
+    hd = 32
+    nkv = kvd // hd
+    nq = nkv * gqa
+    B, MAXB = 3, min(4, NB)
+    rng = np.random.default_rng(3)
+    pages = jnp.asarray(rng.normal(size=(NB, BS, 2 * kvd)), dtype)
+    q = jnp.asarray(rng.normal(size=(B, nq, hd)), dtype)
+    bt = np.full((B, MAXB), -1, np.int32)
+    lens = np.zeros(B, np.int32)
+    for b in range(B):
+        nb = rng.integers(1, MAXB + 1)
+        bt[b, :nb] = rng.permutation(NB)[:nb]
+        lens[b] = rng.integers(1, nb * BS + 1)
+    got = paged_attention_pallas(q, pages, jnp.asarray(bt),
+                                 jnp.asarray(lens), interpret=True)
+    want = ref.paged_attention(q, pages, jnp.asarray(bt), jnp.asarray(lens))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_gather_scatter_roundtrip(data):
+    """Property: scatter(gather(pool, idx), idx) is the identity, and
+    blocks not in idx are untouched by scatter."""
+    NB = data.draw(st.integers(4, 24))
+    BS = data.draw(st.sampled_from([4, 8, 16]))
+    L = data.draw(st.integers(1, 4))
+    kvd = data.draw(st.sampled_from([32, 64]))
+    n = data.draw(st.integers(1, NB))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    storage = jnp.asarray(rng.normal(size=(L, NB, BS, 2 * kvd)), jnp.float32)
+    idx = jnp.asarray(rng.permutation(NB)[:n], jnp.int32)
+    buf = kv_gather_pallas(storage, idx, interpret=True)
+    back = kv_scatter_pallas(storage, buf, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(storage))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31), n_seq=st.integers(1, 5))
+def test_paged_attention_is_permutation_invariant(seed, n_seq):
+    """Property: physical block placement must not change the output —
+    attention over pages depends only on the logical token order."""
+    rng = np.random.default_rng(seed)
+    NB, BS, kvd, hd = 16, 8, 64, 32
+    nkv = kvd // hd
+    q = jnp.asarray(rng.normal(size=(n_seq, nkv * 2, hd)), jnp.float32)
+    tokens = [rng.normal(size=(rng.integers(1, 3) * BS, 2 * kvd))
+              for _ in range(n_seq)]
+    lens_fixed = np.asarray(
+        [rng.integers(1, len(t) + 1) for t in tokens], np.int32)
+
+    def build(order_seed):
+        prm = np.random.default_rng(order_seed).permutation(NB)
+        pages = np.zeros((NB, BS, 2 * kvd))
+        bt = np.full((n_seq, 4), -1, np.int32)
+        cursor = 0
+        for i, t in enumerate(tokens):
+            nb = len(t) // BS
+            blocks = prm[cursor: cursor + nb]
+            cursor += nb
+            for j, b in enumerate(blocks):
+                pages[b] = t[j * BS:(j + 1) * BS]
+            bt[i, :nb] = blocks
+        return (jnp.asarray(pages, jnp.float32), jnp.asarray(bt),
+                jnp.asarray(lens_fixed))
+
+    p1, b1, l1 = build(1)
+    p2, b2, l2 = build(2)
+    o1 = paged_attention_pallas(q, p1, b1, l1, interpret=True)
+    o2 = paged_attention_pallas(q, p2, b2, l2, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- flash prefill
+from repro.kernels.flash_prefill import flash_prefill_pallas
+
+
+@pytest.mark.parametrize("s,hd", [(128, 64), (256, 64), (256, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_prefill_matches_ref(s, hd, dtype):
+    rng = np.random.default_rng(7)
+    bh = 3
+    q = jnp.asarray(rng.normal(size=(bh, s, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, s, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, s, hd)), dtype)
+    got = flash_prefill_pallas(q, k, v, q_tile=128, kv_tile=128,
+                               interpret=True)
+    want = ref.flash_prefill(q, k, v)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_prefill_causality():
+    """Property: output at position i must not depend on tokens > i."""
+    rng = np.random.default_rng(8)
+    s, hd = 128, 64
+    q = jnp.asarray(rng.normal(size=(1, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, hd)), jnp.float32)
+    o1 = flash_prefill_pallas(q, k, v, interpret=True)
+    k2 = k.at[0, 100:].set(99.0)   # perturb the future
+    v2 = v.at[0, 100:].set(-99.0)
+    o2 = flash_prefill_pallas(q, k2, v2, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[0, :100]),
+                               np.asarray(o2[0, :100]), rtol=1e-6)

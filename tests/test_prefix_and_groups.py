@@ -1,0 +1,167 @@
+"""Prefix-cache invariants (hypothesis), fine-grained grouping benefit,
+group workflows, MLOps recovery, zookeeper consistency."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cluster_sim import ClusterSim, SimConfig, run_workload
+from repro.core.group import PDGroup
+from repro.core.mlops import MLOps, NodeMonitor
+from repro.core.prefix_cache import PrefixCache
+from repro.core.profiles import profile_for
+from repro.core.requests import DEFAULT_SCENARIOS, WorkloadGenerator
+from repro.core.zookeeper import MetaStore
+
+
+# ----------------------------------------------------------- prefix cache
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_prefix_cache_budget_and_lru(data):
+    budget = data.draw(st.integers(1 << 10, 1 << 16))
+    bpt = data.draw(st.sampled_from([16, 64, 256]))
+    pc = PrefixCache(budget, bpt)
+    for _ in range(data.draw(st.integers(1, 60))):
+        pid = f"p{data.draw(st.integers(0, 12))}"
+        plen = data.draw(st.integers(1, 64))
+        if data.draw(st.booleans()):
+            pc.lookup(pid, plen)
+        else:
+            pc.insert(pid, plen)
+        assert pc.invariant_ok()
+        assert pc.used <= budget
+
+
+def test_prefix_cache_eviction_is_lru():
+    pc = PrefixCache(budget_bytes=300, kv_bytes_per_token=10)
+    pc.insert("a", 10)   # 100 bytes
+    pc.insert("b", 10)
+    pc.insert("c", 10)   # full
+    pc.lookup("a", 10)   # refresh a
+    pc.insert("d", 10)   # evicts b (LRU), not a
+    assert "a" in pc and "d" in pc and "b" not in pc
+
+
+def test_fine_grained_groups_beat_mixed_pool():
+    """C1: per-scenario groups keep prefixes hot; a mixed pool under the
+    same total HBM thrashes and loses TTFT/throughput."""
+    arch = get_config("pangu-38b")
+    prof = profile_for(arch)
+    budget = 64 * prof.kv_bytes_per_token * 1024  # tight-ish HBM for prefixes
+
+    def run(scenarios, n_p, n_d, seed):
+        gen = WorkloadGenerator(scenarios, base_rps=30, seed=seed)
+        reqs = gen.arrivals(40.0)
+        sim = ClusterSim(SimConfig(profile=prof, hbm_prefix_budget=budget),
+                         n_prefill=n_p, n_decode=n_d, policy="ondemand",
+                         seed=seed)
+        return run_workload(sim, reqs, 60.0)
+
+    # mixed: all six scenarios into one pool of 6P/12D
+    mixed = run(DEFAULT_SCENARIOS, 6, 12, seed=1)
+    # fine-grained: one group of 1P/2D per scenario (same totals)
+    fine = [run([sc], 1, 2, seed=1) for sc in DEFAULT_SCENARIOS]
+    fine_hit = sum(f["prefix_hit_rate"] for f in fine) / len(fine)
+    fine_thr = sum(f["throughput_rps"] for f in fine)
+    assert fine_hit > mixed["prefix_hit_rate"] + 0.05
+    assert fine_thr > mixed["throughput_rps"] * 0.95
+
+
+# ---------------------------------------------------------------- groups
+def test_group_setup_workflow():
+    meta = MetaStore()
+    g = PDGroup("svcA/chat#g0", "svcA/chat", meta)
+    t_done = g.setup(0.0, n_prefill=2, n_decode=3)
+    assert t_done > 0
+    assert len(g.members("P")) == 2 and len(g.members("D")) == 3
+    steps = [e.step for e in g.timeline]
+    assert steps == ["gathered", "connected", "model_loaded", "serving"]
+    # every instance has device-ordered RoCE IPs
+    for iid in g.members("P") + g.members("D"):
+        assert len(meta.instances[iid].roce_ips) == 8
+
+
+def test_ratio_adjustment_dynamic_roce():
+    meta = MetaStore()
+    g = PDGroup("g1", "s", meta)
+    g.setup(0.0, 3, 3)
+    t = g.adjust_ratio(100.0, 2, 4)
+    assert g.ratio == (2, 4)
+    assert t > 100.0
+    # shrink only: no model load needed
+    t2 = g.adjust_ratio(t, 2, 3)
+    assert g.ratio == (2, 3)
+    assert t2 - t < 10.0
+
+
+def test_recovery_minimum_cost():
+    meta = MetaStore()
+    g = PDGroup("g2", "s", meta)
+    g.setup(0.0, 2, 2)
+    ml = MLOps(meta, NodeMonitor(seed=1, fault_rate_per_hour=0.0))
+    victim = g.members("D")[0]
+    before = set(meta.instances)
+    rec = ml.recover(10.0, g, victim, "device_reset")
+    after = set(meta.instances)
+    # exactly one removed, exactly one substitute added
+    assert before - after == {victim}
+    assert len(after - before) == 1
+    assert rec.recovery_time > 0
+    assert g.ratio == (2, 2)           # service shape restored
+    assert victim not in meta.group_members("g2", "D")
+
+
+def test_auto_detection_recovers_injected_faults():
+    meta = MetaStore()
+    g = PDGroup("g3", "s", meta)
+    g.setup(0.0, 4, 4)
+    ml = MLOps(meta, NodeMonitor(seed=3, fault_rate_per_hour=25.0))
+    recs = []
+    t = 0.0
+    for _ in range(20):
+        t += 360.0
+        recs += ml.check_and_recover(t, g, dt_hours=0.1)
+    assert recs, "fault injection should have triggered"
+    assert g.ratio == (4, 4)
+
+
+def test_zookeeper_remove_blocks_forwarding():
+    meta = MetaStore()
+    meta.register_group("g", None)
+    m = meta.gather_instance(0.0, "i0", "P", "g")
+    assert "i0" in meta.group_members("g", "P")
+    meta.remove_instance(1.0, "i0")
+    assert "i0" not in meta.group_members("g", "P")
+    assert "i0" not in meta.instances
+
+
+# --------------------------------------------------- tiered pool (§6.2)
+def test_tiered_cache_spills_and_promotes():
+    from repro.core.prefix_cache import TieredPrefixCache
+    tc = TieredPrefixCache(hbm_budget=200, host_budget=1000,
+                           kv_bytes_per_token=10)
+    tc.insert("a", 10)            # 100B
+    tc.insert("b", 10)            # 100B -> HBM full
+    tc.insert("c", 10)            # evicts "a" -> host tier
+    got, load = tc.lookup("a", 10)
+    assert got == 10 and load > 0          # host hit pays a load penalty
+    got, load = tc.lookup("a", 10)
+    assert got == 10 and load == 0.0       # promoted back to HBM
+    assert tc.invariant_ok()
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_tiered_cache_invariants(data):
+    from repro.core.prefix_cache import TieredPrefixCache
+    tc = TieredPrefixCache(hbm_budget=data.draw(st.integers(100, 2000)),
+                           host_budget=data.draw(st.integers(100, 5000)),
+                           kv_bytes_per_token=10)
+    for _ in range(data.draw(st.integers(1, 40))):
+        pid = f"p{data.draw(st.integers(0, 8))}"
+        ln = data.draw(st.integers(1, 50))
+        if data.draw(st.booleans()):
+            got, load = tc.lookup(pid, ln)
+            assert got >= 0 and load >= 0.0
+        else:
+            tc.insert(pid, ln)
+        assert tc.invariant_ok()

@@ -1,0 +1,86 @@
+"""§3.7 multi-region routing + disaster recovery, and §3.2 pre-compiled
+model store (AOT serialize/load)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.configs import get_config
+from repro.core.cluster_sim import ClusterSim, SimConfig
+from repro.core.profiles import profile_for
+from repro.core.regions import Region, ServiceRouter
+from repro.core.requests import Scenario, WorkloadGenerator
+from repro.launch.precompile import ArtifactStore
+from repro.models.config import ShapeConfig
+
+
+def _region(name, prof, scenario, seed):
+    sim = ClusterSim(SimConfig(profile=prof), n_prefill=2, n_decode=4,
+                     policy="ondemand", seed=seed)
+    return Region(name, {scenario: sim})
+
+
+def test_router_balances_by_capacity():
+    prof = profile_for(get_config("pangu-38b"))
+    sc = Scenario("svc/x", "svc", 512, 2, 128, 32, 64, 16, 3.0)
+    r1 = _region("r1", prof, sc.name, 1)
+    r2 = _region("r2", prof, sc.name, 2)
+    router = ServiceRouter([r1, r2], seed=0)
+    gen = WorkloadGenerator([sc], base_rps=12, seed=3)
+    m = router.run(gen.arrivals(40.0), 60.0)
+    assert m["success_rate"] > 0.95
+    # both regions took meaningful traffic
+    assert min(m["routed"].values()) > 0.25 * max(m["routed"].values())
+
+
+def test_region_failure_fails_over():
+    prof = profile_for(get_config("pangu-38b"))
+    sc = Scenario("svc/x", "svc", 512, 2, 128, 32, 64, 16, 3.0)
+    r1 = _region("r1", prof, sc.name, 1)
+    r2 = _region("r2", prof, sc.name, 2)
+    router = ServiceRouter([r1, r2], seed=0)
+    gen = WorkloadGenerator([sc], base_rps=10, seed=4)
+    m = router.run(gen.arrivals(40.0), 70.0, fail_at=20.0, fail_region="r1")
+    # service continues: late traffic all lands in r2, nothing dropped
+    assert m["dropped"] == 0
+    assert m["success_rate"] > 0.9
+    late_r1 = [r for r in r1.sims[sc.name].completed if r.arrival >= 20.0]
+    assert not late_r1, "failed region must not receive post-failure traffic"
+
+
+def test_all_regions_down_drops_cleanly():
+    prof = profile_for(get_config("pangu-38b"))
+    sc = Scenario("svc/x", "svc", 512, 2, 128, 32, 64, 16, 3.0)
+    r1 = _region("r1", prof, sc.name, 1)
+    router = ServiceRouter([r1], seed=0)
+    router.fail_region("r1")
+    gen = WorkloadGenerator([sc], base_rps=5, seed=5)
+    m = router.run(gen.arrivals(10.0), 20.0)
+    assert m["completed"] == 0 and m["dropped"] > 0
+
+
+# ------------------------------------------------------------ precompile
+def test_precompiled_store_roundtrip(tmp_path):
+    cfg, params = reduced_params("granite-3-8b")
+    from repro.models.caches import zeros_cache
+    shape = ShapeConfig("t", 32, 2, "decode")
+    store = ArtifactStore(str(tmp_path))
+    cache = zeros_cache(cfg, 2, 32)
+    tok = jnp.zeros((2,), jnp.int32)
+    abstract = (jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                             params),
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                             cache),
+                jax.ShapeDtypeStruct((2,), jnp.int32))
+    man = store.precompile("granite/decode", cfg, shape, abstract)
+    assert man["size_bytes"] > 0
+    fn, man2 = store.load("granite/decode")
+    assert man2["load_s"] >= 0
+    nxt, new_cache = fn(params, cache, tok)
+    # must equal the jit path exactly
+    from repro.models.steps import make_serve_step
+    want, _ = jax.jit(make_serve_step(cfg))(params,
+                                            zeros_cache(cfg, 2, 32), tok)
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(want))
+    assert "granite_decode" in store.available()

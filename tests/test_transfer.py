@@ -1,0 +1,123 @@
+"""Block-free vs block-fixed transfer: bit-exact delivery, timing model
+properties (Fig. 4), and pool invariants under hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from conftest import reduced_params
+from repro.core.transfer import KVTransferEngine, LinkModel
+from repro.serving.kvcache import PagedKVPool, PoolExhausted
+
+
+def _pools(arch="granite-3-8b", nb=32, bs=4):
+    cfg, _ = reduced_params(arch)
+    return (PagedKVPool(cfg, num_blocks=nb, block_size=bs),
+            PagedKVPool(cfg, num_blocks=nb, block_size=bs), cfg)
+
+
+def _fill(pool, rid, tokens, seed=0):
+    cfg = pool.cfg
+    rng = np.random.default_rng(seed)
+    blocks = pool.alloc(rid, tokens)
+    k = jnp.asarray(rng.normal(size=(pool.attn_layers, tokens, cfg.kv_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(pool.attn_layers, tokens, cfg.kv_dim)),
+                    jnp.float32)
+    pool.write_prefill(blocks, k, v)
+    return blocks, k, v
+
+
+def test_both_modes_deliver_identical_bytes():
+    src, dst_a, cfg = _pools()
+    dst_b = PagedKVPool(cfg, num_blocks=32, block_size=4)
+    blocks, k, v = _fill(src, rid=1, tokens=13)
+    eng = KVTransferEngine(LinkModel())
+    da = dst_a.alloc(1, 13)
+    db = dst_b.alloc(1, 13)
+    eng.transfer_block_free(src, blocks, dst_a, da)
+    eng.transfer_block_fixed(src, blocks, dst_b, db)
+    got_a = np.asarray(dst_a.read_tokens(da, 13))
+    got_b = np.asarray(dst_b.read_tokens(db, 13))
+    np.testing.assert_array_equal(got_a, got_b)
+    want = np.concatenate([np.asarray(k), np.asarray(v)], -1)
+    np.testing.assert_allclose(got_a, want, rtol=1e-6)
+
+
+def test_block_free_is_faster_and_fewer_messages():
+    src, dst, cfg = _pools()
+    blocks, _, _ = _fill(src, rid=2, tokens=25)
+    eng = KVTransferEngine(LinkModel())
+    d1 = dst.alloc(2, 25)
+    r_free = eng.transfer_block_free(src, blocks, dst, d1)
+    dst.release(2)
+    d2 = dst.alloc(2, 25)
+    r_fix = eng.transfer_block_fixed(src, blocks, dst, d2)
+    assert r_free.nbytes == r_fix.nbytes
+    assert r_free.n_msgs < r_fix.n_msgs
+    assert r_free.time_s < r_fix.time_s
+
+
+@given(nbytes=st.integers(1 << 10, 1 << 28),
+       block=st.sampled_from([4096, 65536, 1 << 20]),
+       layers=st.integers(1, 80))
+@settings(max_examples=50, deadline=None)
+def test_link_model_block_free_never_slower(nbytes, block, layers):
+    eng = KVTransferEngine(LinkModel())
+    t_free = eng.time_only(nbytes, block_bytes=block, layers=layers,
+                           mode="block_free")
+    t_fix = eng.time_only(nbytes, block_bytes=block, layers=layers,
+                          mode="block_fixed")
+    t_pl = eng.time_only(nbytes, block_bytes=block, layers=layers,
+                         mode="block_free", per_layer=True)
+    assert t_free <= t_fix
+    assert t_free <= t_pl <= t_fix
+
+
+def test_utilization_drops_with_smaller_blocks():
+    """Fig. 4b: smaller blocks -> more control messages -> lower D2D
+    bandwidth utilization."""
+    link = LinkModel()
+    nbytes = 64 << 20
+    utils = [link.utilization(nbytes, max(1, nbytes // bb))
+             for bb in (1 << 12, 1 << 16, 1 << 20, nbytes)]
+    assert all(a < b + 1e-12 for a, b in zip(utils, utils[1:]))
+    assert utils[-1] > 0.95
+
+
+def test_multihop_conflicts_increase_variance():
+    """Fig. 14d: multi-hop transfers show heavy-tail variance."""
+    import random
+    one = LinkModel(hops=1)
+    multi = LinkModel(hops=3, conflict_prob=0.25)
+    rng = random.Random(0)
+    t1 = [one.time(8 << 20, 1, rng) for _ in range(300)]
+    t2 = [multi.time(8 << 20, 1, rng) for _ in range(300)]
+    assert np.std(t2) > 10 * np.std(t1)
+
+
+# ----------------------------------------------------------- pool safety
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_pool_alloc_release_invariants(data):
+    cfg, _ = reduced_params("granite-3-8b")
+    pool = PagedKVPool(cfg, num_blocks=24, block_size=4)
+    live = set()
+    for step in range(data.draw(st.integers(1, 30))):
+        if live and data.draw(st.booleans()):
+            rid = data.draw(st.sampled_from(sorted(live)))
+            pool.release(rid)
+            live.discard(rid)
+        else:
+            rid = step + 1000
+            tokens = data.draw(st.integers(1, 30))
+            try:
+                pool.alloc(rid, tokens)
+                live.add(rid)
+            except PoolExhausted:
+                pass
+        assert pool.invariant_ok()
+    for rid in list(live):
+        pool.release(rid)
+    assert pool.free_blocks == 24
