@@ -86,4 +86,41 @@ def run() -> list:
                  f"succ={succ:.2f},{'|'.join(ratios)}"))
     rows.append(("e2e/pdserve_vs_aggregated_x", x_agg, "paper:6.7x"))
     rows.append(("e2e/pdserve_vs_v1_gain_pct", gain_v1, "paper:60pct"))
+    rows.extend(_real_frontend_rows())
     return rows
+
+
+def _real_frontend_rows() -> list:
+    """Real-engine spot check: the multi-group frontend must serve a
+    mixed-scenario workload token-identical to the single-group shim."""
+    import numpy as np
+
+    from repro.serving.cluster import MiniCluster, ServeRequest
+    from repro.serving.frontend import ClusterFrontend
+
+    cfg = get_config("granite-3-8b").reduced()
+
+    def mk():
+        rng = np.random.default_rng(7)
+        return [ServeRequest(
+            rid=i, scenario="svc/chat" if i % 2 == 0 else "svc/summ",
+            tokens=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(5, 12)))),
+            max_new_tokens=3) for i in range(6)]
+
+    fe = ClusterFrontend(cfg, topology={"svc/chat": (1, 1),
+                                        "svc/summ": (1, 1)})
+    multi = mk()
+    fe.run(multi, max_ticks=80)
+    mc = MiniCluster(cfg, n_prefill=2, n_decode=2, params=fe.params)
+    base = mk()
+    mc.run(base, max_ticks=80)
+    match = all(a.generated == b.generated for a, b in zip(multi, base))
+    return [
+        ("e2e/real_frontend_done", float(sum(r.done for r in multi)),
+         "of_6_across_2_scenario_groups"),
+        ("e2e/real_frontend_token_parity", float(match),
+         "vs_single_group_MiniCluster"),
+        ("e2e/real_frontend_ticks", float(fe.tick_no),
+         f"rejections={fe.rejections}"),
+    ]

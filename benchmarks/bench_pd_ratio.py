@@ -1,8 +1,13 @@
 """Paper Fig. 12 + Fig. 13a: P/D mismatch and ratio adjustment.
 
 Sweeps n_p:n_d at fixed total instances; the Eq.1 optimum should beat the
-worst fixed ratio by >= 60% E2E throughput (paper's claim)."""
+worst fixed ratio by >= 60% E2E throughput (paper's claim). A second,
+real-engine section runs a tidal two-wave workload through the
+ClusterFrontend and reports the runtime P<->D role flips the adjuster
+performs from the group's own observed queue/TTFT/timing stats."""
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import Row
 from repro.configs import get_config
@@ -56,4 +61,51 @@ def run() -> list:
                  f"best={best_np}p(paper:>=60),eq1_said={n_p_opt}p"))
     rows.append(("pd_ratio/best_vs_worst_gain_pct", gain_worst,
                  "blind_ratio_penalty"))
+    rows.extend(_real_tidal_rows())
     return rows
+
+
+def _real_tidal_rows() -> list:
+    """Runtime ratio adjustment on REAL engines under tidal traffic:
+    deploy 3P:1D, send a decode-heavy wave then a prefill-heavy wave,
+    and let the adjuster flip idle nodes from the observed profile."""
+    from repro.serving.cluster import ServeRequest
+    from repro.serving.frontend import ClusterFrontend
+
+    cfg = get_config("granite-3-8b").reduced()
+    fe = ClusterFrontend(cfg, topology={"tidal/gen": (3, 1)},
+                         adjust_ratio=True, adjust_interval=3)
+    g = fe.groups["tidal/gen"]
+    rng = np.random.default_rng(0)
+
+    def mk(rid, max_new):
+        return ServeRequest(
+            rid=rid, scenario="tidal/gen",
+            tokens=list(rng.integers(0, cfg.vocab_size,
+                                     int(rng.integers(6, 12)))),
+            max_new_tokens=max_new)
+
+    # tide in: sparse long-generation traffic (decode-bound) ...
+    schedule = {t: mk(t, 10) for t in range(0, 12, 2)}
+    # ... tide out: dense short-generation traffic (prefill-bound)
+    schedule.update({t: mk(100 + t, 1) for t in range(30, 54, 2)})
+    reqs = list(schedule.values())
+    ratio_track = [g.ratio]
+    for t in range(90):
+        if t in schedule:
+            fe.submit(schedule[t])
+        fe.tick()
+        if g.ratio != ratio_track[-1]:
+            ratio_track.append(g.ratio)
+        if t > 54 and all(r.done for r in reqs):
+            break
+    kinds = [f[3] for f in g.flips]
+    n_p, n_d = g.ratio
+    return [
+        ("pd_ratio/real_engine_flips", float(len(g.flips)),
+         f"P->D={kinds.count('P->D')},D->P={kinds.count('D->P')}"),
+        ("pd_ratio/real_engine_final_np", float(n_p),
+         f"track={'|'.join(f'{p}:{d}' for p, d in ratio_track)}"),
+        ("pd_ratio/real_engine_completed", float(sum(r.done for r in reqs)),
+         f"of_{len(reqs)}_tidal_requests"),
+    ]

@@ -1,6 +1,7 @@
-"""End-to-end driver (the paper's kind): serve batched requests across a
-multi-instance P/D group, comparing block-free vs block-fixed transfer and
-showing gateway rejections + zookeeper metadata.
+"""End-to-end driver (the paper's kind): serve a two-scenario workload
+through the scenario-aware multi-group frontend (affinity routing +
+cross-group fallback), then compare block-free vs block-fixed transfer
+on the single-group MiniCluster shim.
 
   PYTHONPATH=src python examples/disaggregated_serving.py
 """
@@ -14,20 +15,42 @@ sys.path.insert(0, "src")
 from repro.configs import get_config  # noqa: E402
 from repro.core.transfer import LinkModel  # noqa: E402
 from repro.serving.cluster import MiniCluster, ServeRequest  # noqa: E402
+from repro.serving.frontend import ClusterFrontend  # noqa: E402
 
 
-def workload(cfg, n, seed=1):
+def workload(cfg, n, seed=1, *, scenario="default", max_new=6, rid0=0):
     rng = np.random.default_rng(seed)
-    return [ServeRequest(rid=i,
+    return [ServeRequest(rid=rid0 + i, scenario=scenario,
                          tokens=list(rng.integers(0, cfg.vocab_size,
                                                   int(rng.integers(6, 24)))),
-                         max_new_tokens=6)
+                         max_new_tokens=max_new)
             for i in range(n)]
 
 
 def main():
     cfg = get_config("qwen2-moe-a2.7b").reduced()
     print(f"arch: {cfg.name} (MoE {cfg.moe.num_experts}e top-{cfg.moe.top_k})")
+
+    # ---- scenario-aware multi-group frontend (paper §3.2 + §3.5)
+    fe = ClusterFrontend(cfg, topology={"svcA/chat": (1, 1),
+                                        "svcA/summ": (1, 1)},
+                         link=LinkModel())
+    reqs = (workload(cfg, 5, seed=2, scenario="svcA/chat")
+            + workload(cfg, 5, seed=3, scenario="svcA/summ", rid0=100))
+    t0 = time.time()
+    fe.run(reqs, max_ticks=200)
+    print(f"multi-group: {sum(r.done for r in reqs)}/{len(reqs)} done, "
+          f"wall {time.time()-t0:.1f}s")
+    for sc, st in fe.stats().items():
+        print(f"  {sc:12s}: {int(st['n_p'])}P:{int(st['n_d'])}D "
+              f"accepted={int(st['accepted'])} "
+              f"rejections={int(st['rejections'])}")
+    print("zookeeper groups:",
+          {gid: {role: fe.meta.group_members(gid, role)
+                 for role in ("P", "D")}
+           for gid in fe.meta.groups})
+
+    # ---- transfer-mode comparison on the single-group shim
     for mode in ("block_free", "block_fixed"):
         mc = MiniCluster(cfg, n_prefill=2, n_decode=2, transfer_mode=mode,
                          link=LinkModel())
@@ -41,12 +64,8 @@ def main():
               f"wall {time.time()-t0:.1f}s, modeled D2D "
               f"{sim_d2d*1e3:.2f}ms over {msgs} msgs/transfer, "
               f"gateway rejections={mc.rejections}")
-    # the zookeeper view of the group
-    mc_meta = mc.meta
-    print("zookeeper group g0:",
-          {role: mc_meta.group_members("g0", role) for role in ("P", "D")})
     print("first instance RoCE IPs:",
-          mc_meta.instances["P0"].roce_ips[:4], "...")
+          mc.meta.instances["P0"].roce_ips[:4], "...")
 
 
 if __name__ == "__main__":

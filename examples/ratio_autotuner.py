@@ -1,12 +1,16 @@
 """P/D ratio auto-adjustment (paper §3.3, Fig. 12): run a decode-heavy
 workload on a bad ratio, watch the bottleneck monitor flag it, re-run on
-the Eq.1 optimum and compare.
+the Eq.1 optimum and compare — then do the adjustment LIVE on real
+engines: a ClusterFrontend deployed at a bad ratio flips idle nodes
+between P and D roles at runtime until it reaches the optimum.
 
   PYTHONPATH=src python examples/ratio_autotuner.py
 """
 import sys
 
 sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.core.cluster_sim import ClusterSim, SimConfig, run_workload  # noqa: E402
@@ -51,6 +55,38 @@ def main():
             - 1) * 100
     print(f"{n_p}P:{n_d}D -> {m_opt['throughput_rps']:.1f} rps, "
           f"success {m_opt['success_rate']:.2f}  (+{gain:.0f}% throughput)")
+
+    live_adjustment()
+
+
+def live_adjustment():
+    """Runtime ratio adjustment on REAL engines: deploy 3P:1D against a
+    decode-heavy Eq.1 profile and watch the adjuster flip nodes."""
+    from repro.serving.cluster import ServeRequest
+    from repro.serving.frontend import ClusterFrontend
+
+    cfg = get_config("granite-3-8b").reduced()
+    iprof = InstanceProfile(ttft_bs=0.1, b_p=4, r_pre=1.0, tpot_bs=0.05,
+                            b_d=8, gen_tokens=100.0, xi=0.0)
+    want = optimal_ratio(iprof, 4)
+    fe = ClusterFrontend(cfg, topology={"demo/gen": (3, 1)},
+                         adjust_ratio=True, adjust_interval=2,
+                         profiles={"demo/gen": iprof})
+    g = fe.groups["demo/gen"]
+    print(f"live: deployed {g.ratio[0]}P:{g.ratio[1]}D, "
+          f"Eq.1 wants {want[0]}P:{want[1]}D")
+    rng = np.random.default_rng(0)
+    reqs = [ServeRequest(rid=i, scenario="demo/gen",
+                         tokens=list(rng.integers(0, cfg.vocab_size, 8)),
+                         max_new_tokens=6) for i in range(6)]
+    fe.run(reqs, max_ticks=60)
+    for _ in range(8):      # idle ticks: let the adjuster converge
+        fe.tick()
+    for tick, old, new, kind in g.flips:
+        print(f"  tick {tick:3d}: {kind}  {old} -> {new} "
+              f"(re-registered in zookeeper)")
+    print(f"live: final ratio {g.ratio[0]}P:{g.ratio[1]}D, "
+          f"served {sum(r.done for r in reqs)}/{len(reqs)} during flips")
 
 
 if __name__ == "__main__":

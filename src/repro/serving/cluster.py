@@ -1,22 +1,20 @@
-"""In-process mini-cluster: the REAL data path, end to end.
+"""In-process mini-cluster nodes: the REAL data path, end to end.
 
-Gateway (on-demand rejection forwarding) -> PrefillEngine (real forward)
--> block-free KVCache transfer between actual paged pools (Pallas
-gather/RecvScatter) -> DecodeEngine (paged continuous batching) ->
-streamed tokens. Used by examples/ and the integration tests; cluster-SCALE
-behavior is the discrete-event simulator's job (repro.core.cluster_sim).
+PrefillNode (real forward into a paged pool) -> block-free KVCache
+transfer between actual paged pools (Pallas gather/RecvScatter) ->
+DecodeNode (paged continuous batching) -> streamed tokens. The gateway
+over these nodes is the scenario-aware multi-group ClusterFrontend in
+repro.serving.frontend; MiniCluster below is its single-group
+compatibility shim. Cluster-SCALE behavior is the discrete-event
+simulator's job (repro.core.cluster_sim).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
-
 from repro.core.transfer import KVTransferEngine, LinkModel
-from repro.core.zookeeper import MetaStore
 from repro.models.config import ModelConfig
-from repro.models.params import init_params
 from repro.serving.engine import DecodeEngine, PrefillEngine, PrefillOutput
 from repro.serving.kvcache import PagedKVPool
 
@@ -30,6 +28,8 @@ class ServeRequest:
     done: bool = False
     on_token: Optional[Callable[[int], None]] = None  # SSE stream
     frames: Optional[object] = None  # enc-dec: stub frontend embeddings
+    scenario: str = "default"        # routes to the matching ServeGroup
+    submit_tick: int = -1            # set by the gateway (TTFT in ticks)
 
 
 class PrefillNode:
@@ -44,13 +44,14 @@ class PrefillNode:
         self.forming: List[ServeRequest] = []
         self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
         self.sse_connections = 0
+        self.draining = False        # pending role flip: no new traffic
 
     def idle(self) -> bool:
         return (len(self.forming) < self.batch_size
                 and len(self.waiting) < self.batch_size)
 
     def offer(self, req: ServeRequest) -> bool:
-        if not self.idle():
+        if self.draining or not self.idle():
             return False
         self.forming.append(req)
         self.sse_connections += 1
@@ -87,9 +88,10 @@ class DecodeNode:
         self.engine = DecodeEngine(cfg, params, self.pool,
                                    max_slots=max_slots)
         self.requests: Dict[int, ServeRequest] = {}
+        self.draining = False        # pending role flip: no new traffic
 
     def can_admit(self) -> bool:
-        return bool(self.engine.free_slots())
+        return not self.draining and bool(self.engine.free_slots())
 
     def admit(self, req: ServeRequest, out: PrefillOutput,
               src_pool: PagedKVPool, xfer: KVTransferEngine,
@@ -126,75 +128,56 @@ class DecodeNode:
 
 
 class MiniCluster:
-    """One P/D group with real compute, stepped synchronously."""
+    """One P/D group with real compute, stepped synchronously.
+
+    Thin single-group compatibility shim over the scenario-aware
+    repro.serving.frontend.ClusterFrontend: every request lands in one
+    anonymous "default" group, so the legacy flat instance ids (P0, D0,
+    ...) and the g0 group name are preserved for callers."""
 
     def __init__(self, cfg: ModelConfig, *, n_prefill: int = 1,
                  n_decode: int = 1, seed: int = 0,
                  transfer_mode: str = "block_free",
                  params=None, link: LinkModel = LinkModel()):
+        from repro.serving.frontend import ClusterFrontend  # import cycle
+        self.frontend = ClusterFrontend(
+            cfg, topology={"default": (n_prefill, n_decode)}, seed=seed,
+            transfer_mode=transfer_mode, params=params, link=link,
+            flat_iids=True)
         self.cfg = cfg
-        if params is None:
-            params = init_params(cfg, jax.random.PRNGKey(seed))
-        self.params = params
-        self.meta = MetaStore()
-        self.meta.register_group("g0", "default")
-        self.prefills = [PrefillNode(f"P{i}", cfg, params)
-                         for i in range(n_prefill)]
-        self.decodes = [DecodeNode(f"D{i}", cfg, params)
-                        for i in range(n_decode)]
-        for p in self.prefills:
-            self.meta.gather_instance(0.0, p.iid, "P", "g0")
-        for d in self.decodes:
-            self.meta.gather_instance(0.0, d.iid, "D", "g0")
-        self.xfer = KVTransferEngine(link, seed=seed)
+        self.params = self.frontend.params
         self.transfer_mode = transfer_mode
-        self.pending: List[ServeRequest] = []
-        self.rejections = 0
 
-    # ---------------------------------------------------------- ingress
+    @property
+    def meta(self):
+        return self.frontend.meta
+
+    @property
+    def xfer(self):
+        return self.frontend.xfer
+
+    @property
+    def prefills(self):
+        return self.frontend.groups["default"].prefills
+
+    @property
+    def decodes(self):
+        return self.frontend.groups["default"].decodes
+
+    @property
+    def pending(self) -> List[ServeRequest]:
+        return self.frontend.pending
+
+    @property
+    def rejections(self) -> int:
+        return self.frontend.rejections
+
     def submit(self, req: ServeRequest):
-        self.pending.append(req)
+        self.frontend.submit(req)
 
-    # ------------------------------------------------------------- tick
     def tick(self):
-        # 1. gateway: on-demand forwarding, least-SSE first, retries
-        still: List[ServeRequest] = []
-        for req in self.pending:
-            placed = False
-            for p in sorted(self.prefills, key=lambda x: x.sse_connections):
-                if p.offer(req):
-                    placed = True
-                    break
-                self.rejections += 1
-            if not placed:
-                still.append(req)   # waits at the gateway
-        self.pending = still
-        # 2. prefill batches
-        for p in self.prefills:
-            p.run_batch()
-        # 3. transfer to decode (async retrieval, least-loaded decode)
-        for p in self.prefills:
-            remaining = []
-            for req, out in p.waiting:
-                tgt = min((d for d in self.decodes if d.can_admit()),
-                          key=lambda d: len(d.requests), default=None)
-                if tgt is None:
-                    remaining.append((req, out))
-                    continue
-                tgt.admit(req, out, p.pool, self.xfer,
-                          mode=self.transfer_mode)
-                p.sse_connections -= 1
-            p.waiting = remaining
-        # 4. decode iteration
-        for d in self.decodes:
-            d.step()
+        self.frontend.tick()
 
     def run(self, requests: Sequence[ServeRequest], *,
             max_ticks: int = 200) -> List[ServeRequest]:
-        for r in requests:
-            self.submit(r)
-        for _ in range(max_ticks):
-            self.tick()
-            if all(r.done for r in requests):
-                break
-        return list(requests)
+        return self.frontend.run(requests, max_ticks=max_ticks)

@@ -1,0 +1,417 @@
+"""Scenario-aware multi-group serving frontend on the REAL data path.
+
+This is the paper's fine-grained P/D organization (§3.2-3.5) running on
+actual engines rather than the discrete-event simulator:
+
+  ClusterFrontend (gateway)
+    -> ServeGroup["svcA/chat"]: PrefillNode* -> KV transfer -> DecodeNode*
+    -> ServeGroup["svcA/summ"]: PrefillNode* -> KV transfer -> DecodeNode*
+    ...
+
+Each ServeGroup binds one scenario tag to its own prefill/decode nodes
+registered in the MetaStore (the Zookeeper role), so prefill/decode
+processing stays similar within a group. Ingress uses on-demand
+rejection forwarding: least-SSE-connections first within the request's
+scenario group, then across groups when the home group is saturated
+(§3.5 fallback), else the request waits at the gateway.
+
+A RatioAdjuster performs runtime P/D ratio adjustment per group: it
+compares the deployed ratio against the Eq.1 optimum
+(repro.core.perf_model.optimal_ratio) on a profiled-in-advance
+InstanceProfile or on the group's own observed prefill/decode timings,
+gated by observed queue/TTFT pressure, then flips ONE node between P
+and D roles. A flip drains the node first (logical removal: no new
+traffic, in-flight work completes), then swaps the
+PrefillNode/DecodeNode wrapper over the SAME shared params and
+re-registers the instance in the MetaStore — PDGroup's dynamic RoCE
+reconstruction (core.group), but on real engines.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core.perf_model import InstanceProfile, optimal_ratio
+from repro.core.transfer import KVTransferEngine, LinkModel
+from repro.core.zookeeper import MetaStore
+from repro.models.config import ModelConfig
+from repro.models.params import init_params
+from repro.serving.cluster import DecodeNode, PrefillNode, ServeRequest
+
+
+def _mean(xs: Sequence[float]) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def _median(xs: Sequence[float]) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
+class ServeGroup:
+    """One scenario-bound P/D group on real engines (paper §3.2-3.3)."""
+
+    def __init__(self, gid: str, scenario: str, cfg: ModelConfig, params,
+                 meta: MetaStore, xfer: KVTransferEngine, *,
+                 n_prefill: int = 1, n_decode: int = 1,
+                 transfer_mode: str = "block_free",
+                 iid_prefix: Optional[str] = None,
+                 prefill_kwargs: Optional[dict] = None,
+                 decode_kwargs: Optional[dict] = None):
+        self.gid = gid
+        self.scenario = scenario
+        self.cfg = cfg
+        self.params = params
+        self.meta = meta
+        self.xfer = xfer
+        self.transfer_mode = transfer_mode
+        self.prefill_kwargs = dict(prefill_kwargs or {})
+        self.decode_kwargs = dict(decode_kwargs or {})
+        self._prefix = f"{gid}/" if iid_prefix is None else iid_prefix
+        self._n_p = itertools.count()
+        self._n_d = itertools.count()
+        meta.register_group(gid, scenario)
+        self.prefills: List[PrefillNode] = [
+            self._new_prefill(0.0) for _ in range(n_prefill)]
+        self.decodes: List[DecodeNode] = [
+            self._new_decode(0.0) for _ in range(n_decode)]
+        self.rejections = 0
+        self.n_accepted = 0
+        self.accepted: List[int] = []              # recent rids admitted
+        # (tick, old_iid, new_iid, "P->D" | "D->P")
+        self.flips: List[Tuple[int, str, str, str]] = []
+        # observed stats feeding the ratio adjuster; consumers only read
+        # bounded tails, so tick() trims these to a recent window
+        self.prefill_batch_s: List[float] = []     # wall time per batch
+        self.decode_step_s: List[float] = []       # wall time per step
+        self.gen_tokens: List[int] = []            # admitted target lengths
+        self.ttft_ticks: List[int] = []            # submit -> first token
+
+    # ------------------------------------------------- node construction
+    def _new_prefill(self, t: float) -> PrefillNode:
+        iid = f"{self._prefix}P{next(self._n_p)}"
+        node = PrefillNode(iid, self.cfg, self.params,
+                           **self.prefill_kwargs)
+        self.meta.gather_instance(t, iid, "P", self.gid)
+        self.meta.health_report(t, iid)
+        return node
+
+    def _new_decode(self, t: float) -> DecodeNode:
+        iid = f"{self._prefix}D{next(self._n_d)}"
+        node = DecodeNode(iid, self.cfg, self.params, **self.decode_kwargs)
+        self.meta.gather_instance(t, iid, "D", self.gid)
+        self.meta.health_report(t, iid)
+        return node
+
+    @property
+    def ratio(self) -> Tuple[int, int]:
+        return len(self.prefills), len(self.decodes)
+
+    # ------------------------------- ingress (on-demand rejection, §3.5)
+    def offer(self, req: ServeRequest) -> bool:
+        for p in sorted(self.prefills, key=lambda x: x.sse_connections):
+            if p.draining:
+                continue   # logical removal: not a rejection
+            if p.offer(req):
+                self.accepted.append(req.rid)
+                self.n_accepted += 1
+                return True
+            self.rejections += 1
+        return False
+
+    # --------------------------------------------------- per-tick stages
+    def tick(self, tick_no: int):
+        # prefill batches (observed TTFT + batch-latency stats)
+        for p in self.prefills:
+            if not p.forming:
+                continue
+            t0 = time.perf_counter()
+            ready = p.run_batch()
+            self.prefill_batch_s.append(time.perf_counter() - t0)
+            for req, _ in ready:
+                if req.submit_tick >= 0:
+                    self.ttft_ticks.append(tick_no - req.submit_tick)
+        # transfer to decode (async retrieval, least-loaded decode)
+        for p in self.prefills:
+            remaining = []
+            for req, out in p.waiting:
+                tgt = min((d for d in self.decodes if d.can_admit()),
+                          key=lambda d: len(d.requests), default=None)
+                if tgt is None:
+                    remaining.append((req, out))
+                    continue
+                tgt.admit(req, out, p.pool, self.xfer,
+                          mode=self.transfer_mode)
+                self.gen_tokens.append(req.max_new_tokens)
+                p.sse_connections -= 1
+            p.waiting = remaining
+        # decode iteration
+        for d in self.decodes:
+            if not d.requests:
+                continue
+            t0 = time.perf_counter()
+            d.step()
+            self.decode_step_s.append(time.perf_counter() - t0)
+        for hist in (self.prefill_batch_s, self.decode_step_s,
+                     self.gen_tokens, self.ttft_ticks, self.accepted):
+            if len(hist) > 512:
+                del hist[:-256]
+        self._complete_flips(tick_no)
+
+    # --------------------------------- runtime role flips (§3.3 on real)
+    def draining_nodes(self) -> List[str]:
+        return [n.iid for n in self.prefills + self.decodes if n.draining]
+
+    def request_flip(self, src_role: str, *, min_each: int = 1
+                     ) -> Optional[str]:
+        """Mark the least-loaded node of `src_role` as draining; the swap
+        itself happens in _complete_flips once its in-flight work is
+        done. Returns the draining iid, or None if the group cannot give
+        up a node (min_each single-point-failure floor)."""
+        if src_role == "P":
+            live = [p for p in self.prefills if not p.draining]
+            if len(live) <= min_each:
+                return None
+            node = min(live, key=lambda p: (len(p.forming) + len(p.waiting),
+                                            p.iid))
+        else:
+            live = [d for d in self.decodes if not d.draining]
+            if len(live) <= min_each:
+                return None
+            node = min(live, key=lambda d: (len(d.requests), d.iid))
+        node.draining = True
+        return node.iid
+
+    def _complete_flips(self, tick_no: int):
+        t = float(tick_no)
+        for p in [x for x in self.prefills if x.draining]:
+            if p.forming or p.waiting:
+                continue   # in-flight prefill work must complete first
+            self.prefills.remove(p)
+            self.meta.remove_instance(t, p.iid)
+            d = self._new_decode(t)
+            self.flips.append((tick_no, p.iid, d.iid, "P->D"))
+            self.decodes.append(d)
+        for d in [x for x in self.decodes if x.draining]:
+            if d.requests:
+                continue   # in-flight decodes must complete first
+            self.decodes.remove(d)
+            self.meta.remove_instance(t, d.iid)
+            p = self._new_prefill(t)
+            self.flips.append((tick_no, d.iid, p.iid, "D->P"))
+            self.prefills.append(p)
+
+    # ------------------------------------------------------------- stats
+    def observed_profile(self, *, min_samples: int = 3
+                         ) -> Optional[InstanceProfile]:
+        """InstanceProfile from this group's own measured timings, for
+        Eq.1 when no profiled-in-advance numbers are supplied."""
+        if (len(self.prefill_batch_s) < min_samples
+                or len(self.decode_step_s) < min_samples):
+            return None
+        b_p = max(p.batch_size for p in self.prefills) if self.prefills \
+            else 4
+        b_d = max(d.engine.max_slots for d in self.decodes) if self.decodes \
+            else 8
+        # medians: first samples per shape carry one-time JIT compile
+        # cost that would otherwise dominate the window
+        return InstanceProfile(
+            ttft_bs=max(_median(self.prefill_batch_s[-32:]), 1e-9), b_p=b_p,
+            r_pre=1.0, tpot_bs=max(_median(self.decode_step_s[-32:]), 1e-9),
+            b_d=b_d, gen_tokens=max(_mean(self.gen_tokens[-64:]), 1.0),
+            xi=0.0)
+
+    def stats(self) -> Dict[str, float]:
+        n_p, n_d = self.ratio
+        return {
+            "n_p": n_p, "n_d": n_d,
+            "accepted": self.n_accepted,
+            "rejections": self.rejections,
+            "flips": len(self.flips),
+            "ttft_ticks_mean": _mean(self.ttft_ticks),
+        }
+
+
+class RatioAdjuster:
+    """Runtime P/D ratio adjustment for one ServeGroup (§3.3, Fig. 12).
+
+    Every `interval` ticks: compute the Eq.1 optimum for the group's
+    current node count from `profile` (profiled in advance) or from the
+    group's observed timings, and flip ONE node toward it. When no
+    profile is available yet, fall back to pure queue/TTFT pressure:
+    gateway backlog + busy prefills + an idle decode means the prefill
+    side is the bottleneck, and vice versa. A flip fires only after two
+    consecutive adjust ticks agree on the direction (hysteresis: noisy
+    observed timings near the optimum must not ping-pong a node)."""
+
+    def __init__(self, group: ServeGroup, *, interval: int = 8,
+                 min_each: int = 1,
+                 profile: Optional[InstanceProfile] = None):
+        self.group = group
+        self.interval = max(1, interval)
+        self.min_each = min_each
+        self.profile = profile
+        self.decisions: List[Tuple[int, str]] = []
+        self._last_want: Optional[str] = None
+
+    def maybe_adjust(self, tick_no: int, backlog: int = 0) -> Optional[str]:
+        """`backlog`: gateway-queued requests homed to this group."""
+        if tick_no == 0 or tick_no % self.interval:
+            return None
+        g = self.group
+        if g.draining_nodes():
+            return None   # one flip in flight at a time
+        n_p, n_d = g.ratio
+        total = n_p + n_d
+        if total < 2 * self.min_each + 1:
+            return None   # nothing to flip without violating min_each
+        prof = self.profile or g.observed_profile()
+        if prof is not None:
+            # profile is authoritative: at the Eq.1 optimum, do nothing
+            # (falling through to pressure here would oscillate)
+            t_p, _ = optimal_ratio(prof, total, min_each=self.min_each)
+            if t_p > n_p:
+                want = "D->P"
+            elif t_p < n_p:
+                want = "P->D"
+            else:
+                self._last_want = None    # contradicts any armed signal
+                return None
+        else:
+            want = self._pressure_signal(backlog)
+        if want is None:
+            self._last_want = None
+            return None
+        if want != self._last_want:
+            self._last_want = want        # needs confirmation next tick
+            return None
+        self._last_want = None
+        if g.request_flip("D" if want == "D->P" else "P",
+                          min_each=self.min_each) is None:
+            return None
+        self.decisions.append((tick_no, want))
+        return want
+
+    def _pressure_signal(self, backlog: int) -> Optional[str]:
+        g = self.group
+        tt = g.ttft_ticks
+        ttft_rising = (len(tt) >= 16
+                       and _mean(tt[-8:]) > 1.5 * _mean(tt[-16:-8]))
+        prefill_busy = all(p.draining or not p.idle() for p in g.prefills)
+        decode_idle = any(not d.draining and not d.requests
+                          for d in g.decodes)
+        if (backlog > 0 or ttft_rising) and prefill_busy and decode_idle:
+            return "D->P"
+        decode_full = all(not d.can_admit() for d in g.decodes)
+        transfer_backlog = any(p.waiting for p in g.prefills)
+        prefill_free = any(not p.draining and p.idle() for p in g.prefills)
+        if decode_full and transfer_backlog and prefill_free:
+            return "P->D"
+        return None
+
+
+class ClusterFrontend:
+    """Gateway over N scenario groups, stepped synchronously (§3.2, §3.5).
+
+    topology maps scenario tag -> (n_prefill, n_decode); groups are
+    named g0, g1, ... in topology order. Requests route to their
+    scenario's group first and fall back across groups only when the
+    home group rejects them everywhere."""
+
+    def __init__(self, cfg: ModelConfig, *,
+                 topology: Optional[Dict[str, Tuple[int, int]]] = None,
+                 seed: int = 0, transfer_mode: str = "block_free",
+                 params=None, link: Optional[LinkModel] = None,
+                 adjust_ratio: bool = False, adjust_interval: int = 8,
+                 min_each: int = 1,
+                 profiles: Optional[Dict[str, InstanceProfile]] = None,
+                 flat_iids: bool = False,
+                 prefill_kwargs: Optional[dict] = None,
+                 decode_kwargs: Optional[dict] = None):
+        topology = topology or {"default": (1, 1)}
+        if flat_iids and len(topology) > 1:
+            raise ValueError("flat_iids would collide instance ids across "
+                             "groups; it is only for single-group shims")
+        if params is None:
+            params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.cfg = cfg
+        self.params = params
+        self.meta = MetaStore()
+        self.xfer = KVTransferEngine(link or LinkModel(), seed=seed)
+        self.transfer_mode = transfer_mode
+        self.groups: Dict[str, ServeGroup] = {}
+        self.adjusters: Dict[str, RatioAdjuster] = {}
+        profiles = profiles or {}
+        for i, (scenario, (n_p, n_d)) in enumerate(topology.items()):
+            g = ServeGroup(
+                f"g{i}", scenario, cfg, params, self.meta, self.xfer,
+                n_prefill=n_p, n_decode=n_d, transfer_mode=transfer_mode,
+                iid_prefix="" if flat_iids else None,
+                prefill_kwargs=prefill_kwargs, decode_kwargs=decode_kwargs)
+            self.groups[scenario] = g
+            if adjust_ratio:
+                self.adjusters[scenario] = RatioAdjuster(
+                    g, interval=adjust_interval, min_each=min_each,
+                    profile=profiles.get(scenario))
+        self.pending: List[ServeRequest] = []
+        self.tick_no = 0
+
+    @property
+    def rejections(self) -> int:
+        return sum(g.rejections for g in self.groups.values())
+
+    def group_for(self, req: ServeRequest) -> ServeGroup:
+        sc = getattr(req, "scenario", "default")
+        if sc in self.groups:
+            return self.groups[sc]
+        return next(iter(self.groups.values()))
+
+    # ---------------------------------------------------------- ingress
+    def submit(self, req: ServeRequest):
+        req.submit_tick = self.tick_no
+        self.pending.append(req)
+
+    # ------------------------------------------------------------- tick
+    def tick(self):
+        # 1. gateway: on-demand forwarding within the home group, then
+        #    cross-group fallback (§3.5); unplaced requests wait here
+        still: List[ServeRequest] = []
+        for req in self.pending:
+            home = self.group_for(req)
+            placed = home.offer(req)
+            if not placed:
+                for g in self.groups.values():
+                    if g is not home and g.offer(req):
+                        placed = True
+                        break
+            if not placed:
+                still.append(req)
+        self.pending = still
+        # 2-4. per-group prefill / transfer / decode (+ drained flips)
+        backlog: Dict[str, int] = {}
+        for req in self.pending:
+            sc = self.group_for(req).scenario
+            backlog[sc] = backlog.get(sc, 0) + 1
+        for g in self.groups.values():
+            g.tick(self.tick_no)
+        for sc, adj in self.adjusters.items():
+            adj.maybe_adjust(self.tick_no, backlog.get(sc, 0))
+        self.tick_no += 1
+
+    def run(self, requests: Sequence[ServeRequest], *,
+            max_ticks: int = 200) -> List[ServeRequest]:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_ticks):
+            self.tick()
+            if all(r.done for r in requests):
+                break
+        return list(requests)
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        return {sc: g.stats() for sc, g in self.groups.items()}

@@ -1,0 +1,150 @@
+"""Scenario-aware multi-group frontend: affinity routing, cross-group
+fallback, runtime P/D role flips (MetaStore-visible, in-flight work
+completes), and token parity with the single-group MiniCluster shim."""
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.core.perf_model import InstanceProfile, optimal_ratio
+from repro.serving.cluster import MiniCluster, ServeRequest
+from repro.serving.frontend import ClusterFrontend, RatioAdjuster
+
+
+def _requests(cfg, n, *, scenario="default", seed=3, lo=5, hi=12,
+              max_new=4, rid0=0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        rid=rid0 + i, scenario=scenario,
+        tokens=list(rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(lo, hi)))),
+        max_new_tokens=max_new) for i in range(n)]
+
+
+def test_scenario_affinity_routing():
+    """With capacity available everywhere, requests land in their own
+    scenario's group — never a foreign one."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"chat": (1, 1), "summ": (1, 1)},
+                         params=params)
+    reqs = (_requests(cfg, 3, scenario="chat", seed=3)
+            + _requests(cfg, 3, scenario="summ", seed=4, rid0=10))
+    fe.run(reqs, max_ticks=80)
+    assert all(r.done for r in reqs)
+    assert sorted(fe.groups["chat"].accepted) == [0, 1, 2]
+    assert sorted(fe.groups["summ"].accepted) == [10, 11, 12]
+    # both groups are registered and populated in the MetaStore
+    assert fe.meta.group_scenario == {"g0": "chat", "g1": "summ"}
+    assert fe.meta.group_members("g0", "P") == ["g0/P0"]
+    assert fe.meta.group_members("g1", "D") == ["g1/D0"]
+
+
+def test_cross_group_fallback_when_home_saturated():
+    """§3.5: a request rejected everywhere in its home group is forwarded
+    to another scenario's group; with that one full too, it waits at the
+    gateway."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"chat": (1, 1), "summ": (1, 1)},
+                         params=params,
+                         prefill_kwargs={"batch_size": 1})
+    reqs = _requests(cfg, 3, scenario="chat", seed=5)
+    for r in reqs:
+        fe.submit(r)
+    fe.tick()
+    assert fe.groups["chat"].accepted == [0]     # home takes the first
+    assert fe.groups["summ"].accepted == [1]     # overflow forwarded
+    assert [r.rid for r in fe.pending] == [2]    # third waits (gateway)
+    assert fe.rejections >= 2
+    for _ in range(60):
+        fe.tick()
+        if all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs)
+
+
+def test_role_flip_updates_metastore_and_inflight_completes():
+    """A draining decode finishes its in-flight request before the flip;
+    the role change then shows up in the MetaStore and the flipped-in
+    prefill node serves new traffic."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (1, 2)}, params=params)
+    g = fe.groups["default"]
+    req = _requests(cfg, 1, max_new=5)[0]
+    fe.submit(req)
+    fe.tick()   # prefill
+    fe.tick()   # transfer + first decode step
+    busy = next(d for d in g.decodes if d.requests)
+    busy.draining = True
+    assert not g.flips
+    for _ in range(30):
+        fe.tick()
+        if req.done:
+            break
+    assert req.done and len(req.generated) == 6   # in-flight completed
+    for _ in range(3):
+        fe.tick()
+    assert [f for f in g.flips if f[1] == busy.iid and f[3] == "D->P"]
+    assert busy.iid not in fe.meta.instances          # old role removed
+    assert g.ratio == (2, 1)
+    new_iid = g.flips[-1][2]
+    assert new_iid in fe.meta.group_members("g0", "P")  # re-registered
+    # the flipped-in prefill serves real traffic over the same params
+    more = _requests(cfg, 2, seed=9, rid0=50)
+    fe.run(more, max_ticks=60)
+    assert all(r.done for r in more)
+
+
+def test_adjuster_flips_toward_profile_optimum():
+    """Deployed 3P:1D with a decode-heavy Eq.1 profile: the adjuster
+    drains and flips prefills one at a time until the optimum ratio."""
+    cfg, params = reduced_params("granite-3-8b")
+    prof = InstanceProfile(ttft_bs=0.1, b_p=4, r_pre=1.0, tpot_bs=0.05,
+                           b_d=8, gen_tokens=100.0, xi=0.0)
+    assert optimal_ratio(prof, 4) == (1, 3)
+    fe = ClusterFrontend(cfg, topology={"default": (3, 1)}, params=params,
+                         adjust_ratio=True, adjust_interval=1,
+                         profiles={"default": prof})
+    g = fe.groups["default"]
+    for _ in range(6):
+        fe.tick()
+    assert g.ratio == (1, 3)
+    assert [f[3] for f in g.flips] == ["P->D", "P->D"]
+    assert len(fe.meta.group_members("g0", "P")) == 1
+    assert len(fe.meta.group_members("g0", "D")) == 3
+
+
+def test_adjuster_never_violates_min_each():
+    cfg, params = reduced_params("granite-3-8b")
+    prof = InstanceProfile(ttft_bs=0.1, b_p=4, r_pre=1.0, tpot_bs=0.05,
+                           b_d=8, gen_tokens=100.0, xi=0.0)
+    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                         adjust_ratio=True, adjust_interval=1,
+                         profiles={"default": prof})
+    for _ in range(4):
+        fe.tick()
+    assert fe.groups["default"].ratio == (1, 1)   # nothing to give up
+
+
+def test_multi_group_outputs_match_single_group_baseline():
+    """Acceptance: streamed outputs from >= 2 concurrent scenario groups
+    are identical to the single-group MiniCluster baseline for a fixed
+    seed (greedy decode is routing-invariant)."""
+    cfg, params = reduced_params("granite-3-8b")
+
+    def fresh(rid0=0):
+        return (_requests(cfg, 3, scenario="chat", seed=11)
+                + _requests(cfg, 3, scenario="summ", seed=12, rid0=10))
+
+    streams: dict = {}
+    multi = fresh()
+    for r in multi:
+        r.on_token = streams.setdefault(r.rid, []).append
+    fe = ClusterFrontend(cfg, topology={"chat": (1, 1), "summ": (1, 1)},
+                         params=params)
+    fe.run(multi, max_ticks=80)
+    base = fresh()
+    mc = MiniCluster(cfg, n_prefill=2, n_decode=2, params=params)
+    mc.run(base, max_ticks=80)
+    assert all(r.done for r in multi) and all(r.done for r in base)
+    for m, b in zip(multi, base):
+        assert m.generated == b.generated, m.rid
+        assert streams[m.rid] == m.generated      # SSE order preserved
