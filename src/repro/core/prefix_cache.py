@@ -7,8 +7,11 @@ this is the mechanism behind the paper's E2E gain (Fig. 1b).
 
 The registry is a token-level radix-ish structure simplified to
 (prefix_id -> cached length), since the synthetic workload shares exact
-prefixes; the real engine (repro.serving) stores actual KV blocks and uses
-this class for placement/eviction decisions only.
+prefixes. It is SIMULATOR-side placement accounting only (consumed by
+repro.core.cluster_sim); the real serving data path has its own
+block-level implementation — the refcounted radix trie inside
+``repro.serving.kvcache.PagedKVPool`` (shared blocks, COW tail, LRU
+eviction) feeding ``PrefillEngine.run_suffix`` suffix-only prefill.
 """
 from __future__ import annotations
 

@@ -19,7 +19,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            q_tile: int, kv_tile: int, kv_tiles: int, scale: float):
+            q_tile: int, kv_tile: int, kv_tiles: int, scale: float,
+            q_offset: int):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -29,13 +30,15 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(kj <= qi)   # skip fully-masked kv tiles (causal)
+    # skip fully-masked kv tiles: the tile's first key position must not
+    # exceed the tile's last (offset) query position (causal)
+    @pl.when(kj * kv_tile <= q_offset + (qi + 1) * q_tile - 1)
     def _work():
         q = q_ref[0].astype(jnp.float32)          # (q_tile, hd)
         k = k_ref[0].astype(jnp.float32)          # (kv_tile, hd)
         v = v_ref[0].astype(jnp.float32)
         s = jnp.dot(q, k.T) * scale               # (q_tile, kv_tile)
-        qpos = qi * q_tile + jax.lax.broadcasted_iota(
+        qpos = q_offset + qi * q_tile + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 0)
         kpos = kj * kv_tile + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
@@ -57,14 +60,23 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          q_tile: int = 128, kv_tile: int = 128,
-                         interpret: bool = True) -> jax.Array:
-    """Causal attention. q/k/v: (bh, s, hd) with heads flattened into the
-    leading dim (GQA expansion happens in the wrapper). Returns (bh, s, hd).
+                         interpret: bool = True,
+                         q_offset: int = 0) -> jax.Array:
+    """Causal attention. q: (bh, s, hd); k/v: (bh, q_offset + s, hd) with
+    heads flattened into the leading dim (GQA expansion happens in the
+    wrapper). Returns (bh, s, hd).
+
+    q_offset > 0 = chunked/suffix prefill against a reused prefix
+    KVCache: the queries are the last s positions of the kv sequence,
+    kv tiles left of the causal frontier still stream through the same
+    online-softmax state.
     """
     bh, s, hd = q.shape
-    assert s % q_tile == 0 and s % kv_tile == 0, (s, q_tile, kv_tile)
+    sk = k.shape[1]
+    assert sk == q_offset + s, (sk, q_offset, s)
+    assert s % q_tile == 0 and sk % kv_tile == 0, (s, sk, q_tile, kv_tile)
     q_tiles = s // q_tile
-    kv_tiles = s // kv_tile
+    kv_tiles = sk // kv_tile
     scale = 1.0 / math.sqrt(hd)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -83,7 +95,8 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
     )
     kern = functools.partial(_kernel, q_tile=q_tile, kv_tile=kv_tile,
-                             kv_tiles=kv_tiles, scale=scale)
+                             kv_tiles=kv_tiles, scale=scale,
+                             q_offset=q_offset)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,

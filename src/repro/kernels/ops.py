@@ -33,17 +33,26 @@ def _kv_gather_ref(storage, idx):
     return ref.kv_gather(storage, idx)
 
 
+# kv_gather / kv_scatter are pure memory movement: the ref path is
+# bitwise-identical to the kernels, so off-TPU (where the Pallas kernel
+# would run through the grid interpreter — ~1s per transfer on the
+# serving hot path, even jitted) the jitted ref implementation IS the
+# data path. The kernels stay differentially tested against the same
+# ref in tests/test_kernels.py and compile natively on TPU.
+_kv_scatter_ref = jax.jit(ref.kv_scatter)
+
+
 def kv_gather(storage: jax.Array, idx: jax.Array) -> jax.Array:
-    if _use_ref():
+    if _use_ref() or _interpret():
         return _kv_gather_ref(storage, idx)
-    return kv_gather_pallas(storage, idx, interpret=_interpret())
+    return kv_gather_pallas(storage, idx, interpret=False)
 
 
 def kv_scatter(storage: jax.Array, buf: jax.Array,
                idx: jax.Array) -> jax.Array:
-    if _use_ref():
-        return jax.jit(ref.kv_scatter)(storage, buf, idx)
-    return kv_scatter_pallas(storage, buf, idx, interpret=_interpret())
+    if _use_ref() or _interpret():
+        return _kv_scatter_ref(storage, buf.astype(storage.dtype), idx)
+    return kv_scatter_pallas(storage, buf, idx, interpret=False)
 
 
 def paged_attention(q: jax.Array, kv_pages: jax.Array,
@@ -54,7 +63,15 @@ def paged_attention(q: jax.Array, kv_pages: jax.Array,
                                   interpret=_interpret())
 
 
-def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+_flash_prefill_ref = jax.jit(ref.flash_prefill,
+                             static_argnames=("q_offset",))
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_offset: int = 0) -> jax.Array:
+    """q_offset > 0: suffix-only (chunked) prefill against a reused
+    prefix KVCache — k/v cover q_offset + s positions."""
     if _use_ref():
-        return jax.jit(ref.flash_prefill)(q, k, v)
-    return flash_prefill_pallas(q, k, v, interpret=_interpret())
+        return _flash_prefill_ref(q, k, v, q_offset=q_offset)
+    return flash_prefill_pallas(q, k, v, interpret=_interpret(),
+                                q_offset=q_offset)

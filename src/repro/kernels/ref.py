@@ -54,13 +54,20 @@ def paged_attention(q: jax.Array, kv_pages: jax.Array,
     return out.reshape(B, nq, hd)
 
 
-def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
-    """Causal attention oracle. q/k/v: (bh, s, hd)."""
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_offset: int = 0) -> jax.Array:
+    """Causal attention oracle. q: (bh, s, hd); k/v: (bh, q_offset+s, hd).
+
+    q_offset > 0 = chunked/suffix prefill: the queries are the LAST s
+    positions of the kv sequence (prefix-KV reuse)."""
     bh, s, hd = q.shape
+    sk = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bqd,bkd->bqk", q, k,
                         preferred_element_type=jnp.float32) * scale
-    mask = jnp.tril(jnp.ones((s, s), bool))
+    qpos = q_offset + jnp.arange(s)
+    kpos = jnp.arange(sk)
+    mask = kpos[None, :] <= qpos[:, None]
     scores = jnp.where(mask[None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)

@@ -143,27 +143,36 @@ class HloCostModel:
 
     # ------------------------------------------------------------ helpers
     def _operands(self, rest: str) -> List[str]:
-        # operand list terminates at the first ')' at depth 0
+        # Operand list terminates at the first ')' at depth 0. Newer XLA
+        # dumps print operand types inline ("dot(f32[64,32]{1,0} %Arg_0.1,
+        # ...)"), so splitting must also be brace-aware (layout tuples like
+        # {1,0} contain commas) and the operand name is the LAST %token in
+        # each comma-separated slot, not the slot's first character.
         depth = 0
         out = []
         tok = ""
         for ch in rest:
-            if ch == "(":
+            if ch in "({":
                 depth += 1
-                continue
-            if ch == ")":
-                if depth == 0:
+                tok += ch
+            elif ch in ")}":
+                if ch == ")" and depth == 0:
                     break
                 depth -= 1
-                continue
-            if ch == "," and depth == 0:
-                out.append(tok.strip())
+                tok += ch
+            elif ch == "," and depth == 0:
+                out.append(tok)
                 tok = ""
             else:
                 tok += ch
         if tok.strip():
-            out.append(tok.strip())
-        return [t.lstrip("%") for t in out if t.strip().startswith("%")]
+            out.append(tok)
+        names = []
+        for t in out:
+            m = re.findall(r"%([\w\.\-]+)", t)
+            if m:
+                names.append(m[-1])
+        return names
 
     def _operand_bytes(self, rest: str) -> int:
         return sum(_type_bytes(self.types.get(o, ""))

@@ -78,10 +78,15 @@ def _merge_heads(x: jax.Array) -> jax.Array:
 
 def attention_seq(q: jax.Array, k: jax.Array, v: jax.Array, nkv: int, *,
                   causal: bool, window: Optional[int] = None,
-                  q_chunk: int = 0) -> jax.Array:
+                  q_chunk: int = 0, q_offset: int = 0) -> jax.Array:
     """Full-sequence attention, chunked over query blocks.
 
     q: (b, s, nq, hd); k, v: (b, sk, nkv, hd). Returns (b, s, nq, hd).
+
+    ``q_offset`` is the absolute position of the first query row
+    (chunked-prefill / prefix-reuse: queries are the suffix of a longer
+    KV sequence, sk == q_offset + s). The Pallas lowering of the same
+    contract is ``kernels.flash_prefill(..., q_offset=...)``.
 
     KV heads are expanded to the full query-head count: the (nkv, g)
     factorization of GQA is usually NOT shardable on the `model` axis
@@ -121,14 +126,14 @@ def attention_seq(q: jax.Array, k: jax.Array, v: jax.Array, nkv: int, *,
         return jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
 
     if s <= q_chunk or s % q_chunk != 0:
-        return one_chunk(q, 0)
+        return one_chunk(q, q_offset)
     nc = s // q_chunk
     qcs = jnp.moveaxis(q.reshape(b, nc, q_chunk, nq, hd), 1, 0)
 
     @jax.checkpoint
     def body(_, inp):
         i, qi = inp
-        return None, one_chunk(qi, i * q_chunk)
+        return None, one_chunk(qi, q_offset + i * q_chunk)
 
     _, outs = lax.scan(body, None, (jnp.arange(nc), qcs))
     return jnp.moveaxis(outs, 0, 1).reshape(b, s, nq, hd)
@@ -198,7 +203,12 @@ def _attn_proj_qkv(p: Tree, x: jax.Array, cfg: ModelConfig, sfx: str = ""):
 def attn_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
                       causal: bool, positions: jax.Array,
                       window: Optional[int], use_rope: bool = True,
-                      return_kv: bool = False):
+                      return_kv: bool = False,
+                      prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """``prefix_kv`` = (k, v) each (b, plen, kv_dim), already roped at
+    absolute positions 0..plen-1 (a reused prefix KVCache): attention
+    runs over prefix ++ fresh keys with the queries offset by plen.
+    ``return_kv`` yields only the freshly computed (suffix) k/v."""
     x = rmsnorm(h, p["norm"], cfg.norm_eps)
     q, k, v = _attn_proj_qkv(p, x, cfg)
     q = _split_heads(q, cfg.num_heads)
@@ -207,7 +217,16 @@ def attn_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     v4 = _split_heads(v, cfg.num_kv_heads)
-    o = attention_seq(q, k, v4, cfg.num_kv_heads, causal=causal, window=window)
+    k_all, v_all, q_off = k, v4, 0
+    if prefix_kv is not None:
+        kp, vp = prefix_kv
+        q_off = kp.shape[1]
+        k_all = jnp.concatenate(
+            [_split_heads(kp.astype(k.dtype), cfg.num_kv_heads), k], axis=1)
+        v_all = jnp.concatenate(
+            [_split_heads(vp.astype(v4.dtype), cfg.num_kv_heads), v4], axis=1)
+    o = attention_seq(q, k_all, v_all, cfg.num_kv_heads, causal=causal,
+                      window=window, q_offset=q_off)
     h = h + _merge_heads(o) @ p["wo"]
     if return_kv:
         return h, (_merge_heads(k), v)
@@ -525,8 +544,14 @@ def _ffn_sublayer(p: Tree, h: jax.Array, cfg: ModelConfig, is_moe: bool):
 def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
               positions: jax.Array, causal: bool,
               window: Optional[int], enc_out: Optional[jax.Array],
-              collect_cache: bool) -> Tuple[jax.Array, jax.Array, Tree]:
-    """Apply one repeating block (period sublayers). Returns (h, aux, cache)."""
+              collect_cache: bool,
+              prefix: Optional[Tree] = None
+              ) -> Tuple[jax.Array, jax.Array, Tree]:
+    """Apply one repeating block (period sublayers). Returns (h, aux, cache).
+
+    ``prefix`` maps "sub{i}" -> {"k", "v"} reused prefix KVCaches
+    (b, plen, kv_dim) for this block's attention sublayers (prefix
+    reuse is gated upstream to attention-only stacks)."""
     kinds = cfg.layer_kinds()
     moe_mask = cfg.moe_layer_mask()
     period = block_period(cfg)
@@ -537,15 +562,20 @@ def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
         p = blk_params[f"sub{i}"]
         c: Tree = {}
         if kinds[i] == ATTN:
+            pfx = None
+            if prefix is not None:
+                pc = prefix[f"sub{i}"]
+                pfx = (pc["k"], pc["v"])
             if collect_cache:
                 h, (k, v) = attn_sublayer_seq(
                     p, h, cfg, causal=causal, positions=positions,
-                    window=window, use_rope=use_rope, return_kv=True)
+                    window=window, use_rope=use_rope, return_kv=True,
+                    prefix_kv=pfx)
                 c["k"], c["v"] = k, v
             else:
                 h = attn_sublayer_seq(p, h, cfg, causal=causal,
                                       positions=positions, window=window,
-                                      use_rope=use_rope)
+                                      use_rope=use_rope, prefix_kv=pfx)
         else:
             if collect_cache:
                 h, tails = mamba_sublayer_seq(p, h, cfg, return_state=True)
@@ -666,30 +696,40 @@ def _embed_inputs(cfg: ModelConfig, params: Tree, batch: Tree) -> jax.Array:
 
 def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
                 collect_cache: bool, remat: bool,
-                window: Optional[int] = None
+                window: Optional[int] = None,
+                prefix: Optional[Tree] = None, prefix_len: int = 0
                 ) -> Tuple[jax.Array, jax.Array, Optional[Tree]]:
-    """Shared train/prefill path. Returns (hidden (b,s,d), aux, cache|None)."""
+    """Shared train/prefill path. Returns (hidden (b,s,d), aux, cache|None).
+
+    With ``prefix`` (per-block "sub{i}" -> {"k","v"} stacked like
+    params["blocks"]: leading dim num_blocks, then (b, prefix_len,
+    kv_dim)), the batch holds only the uncached SUFFIX tokens: positions
+    start at ``prefix_len`` and every attention sublayer attends over
+    the reused prefix KVCache ++ the fresh suffix keys (suffix-only
+    prefill, paper §2.2.1 prefix reuse on the real path)."""
     h = _embed_inputs(cfg, params, batch)
     s = h.shape[1]
-    positions = jnp.arange(s)
+    positions = prefix_len + jnp.arange(s)
     enc_out = None
     if cfg.is_encoder_decoder:
         enc_out = encoder_forward(cfg, params, batch["frames"])
 
     h = constrain(h, ("batch", "seq_act", None))
 
-    def body(carry, blkp):
+    def body(carry, xs):
         hh, aux = carry
+        blkp, pfx = xs if prefix is not None else (xs, None)
         hh, a, cache = block_seq(cfg, blkp, hh, positions=positions,
                                  causal=True, window=window, enc_out=enc_out,
-                                 collect_cache=collect_cache)
+                                 collect_cache=collect_cache, prefix=pfx)
         hh = constrain(hh, ("batch", "seq_act", None))
         return (hh, aux + a), cache
 
     if remat:
         body = jax.checkpoint(body)
+    xs = params["blocks"] if prefix is None else (params["blocks"], prefix)
     (h, aux), caches = lax.scan(
-        body, (h, jnp.zeros((), jnp.float32)), params["blocks"],
+        body, (h, jnp.zeros((), jnp.float32)), xs,
     )
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     return h, aux, (caches if collect_cache else None)
@@ -743,14 +783,19 @@ def forward_train(cfg: ModelConfig, params: Tree, batch: Tree,
 
 def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
                     window: Optional[int] = None,
-                    last_index: Optional[jax.Array] = None
+                    last_index: Optional[jax.Array] = None,
+                    prefix: Optional[Tree] = None, prefix_len: int = 0
                     ) -> Tuple[jax.Array, Tree]:
     """Returns (first generated token (b,), decode cache).
 
     `last_index` (b,) selects each row's final prompt position for ragged
-    right-padded batches (default: the last column)."""
+    right-padded batches (default: the last column). With
+    `prefix`/`prefix_len` (see forward_seq) the batch is the uncached
+    suffix only and the returned cache covers just those suffix tokens —
+    the caller stitches prefix ++ suffix back together."""
     h, _, caches = forward_seq(cfg, params, batch, collect_cache=True,
-                               remat=False, window=window)
+                               remat=False, window=window,
+                               prefix=prefix, prefix_len=prefix_len)
     if last_index is None:
         h_last = h[:, -1, :]
     else:
@@ -759,7 +804,7 @@ def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
     logits = lm_logits(cfg, params, h_last)
     first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     s = h.shape[1]
-    cache = {"layers": caches, "pos": jnp.asarray(s, jnp.int32)}
+    cache = {"layers": caches, "pos": jnp.asarray(prefix_len + s, jnp.int32)}
     return first, cache
 
 

@@ -10,13 +10,30 @@ simulator's job (repro.core.cluster_sim).
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.transfer import KVTransferEngine, LinkModel
 from repro.models.config import ModelConfig
 from repro.serving.engine import DecodeEngine, PrefillEngine, PrefillOutput
 from repro.serving.kvcache import PagedKVPool
+
+
+def _frames_ns(req: "ServeRequest") -> Optional[str]:
+    """Prefix-index namespace for enc-dec requests: decoder self-attn KV
+    depends on the encoder output, so prefixes are shareable only between
+    requests with byte-identical frames. The digest is memoized on the
+    request (ingress affinity probes every prefill node)."""
+    if req.frames is None:
+        return None
+    ns = getattr(req, "_frames_digest", None)
+    if ns is None:
+        ns = hashlib.sha1(np.asarray(req.frames).tobytes()).hexdigest()
+        req._frames_digest = ns
+    return ns
 
 
 @dataclass
@@ -35,11 +52,17 @@ class ServeRequest:
 class PrefillNode:
     def __init__(self, iid: str, cfg: ModelConfig, params, *,
                  num_blocks: int = 128, block_size: int = 16,
-                 batch_size: int = 4):
+                 batch_size: int = 4, prefix_cache: bool = True):
         self.iid = iid
         self.engine = PrefillEngine(cfg, params)
+        # prefix reuse needs a pure-attention stack (SSM/hybrid state is
+        # not restorable from a KV prefix; attn-free has no KV at all) —
+        # incompatible archs transparently bypass the index
+        self.prefix_cache = bool(prefix_cache) \
+            and self.engine.supports_prefix_reuse
         self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
-                                block_size=block_size)
+                                block_size=block_size,
+                                enable_prefix_cache=self.prefix_cache)
         self.batch_size = batch_size
         self.forming: List[ServeRequest] = []
         self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
@@ -57,23 +80,71 @@ class PrefillNode:
         self.sse_connections += 1
         return True
 
+    def prefix_affinity(self, req: ServeRequest) -> int:
+        """Cached-prefix token count this node could reuse for req
+        (read-only; the group's ingress prefers the longest match)."""
+        if not self.prefix_cache:
+            return 0
+        return self.pool.peek_prefix(req.tokens,
+                                     namespace=_frames_ns(req))
+
+    def prefix_stats(self) -> Dict[str, float]:
+        return {
+            "lookups": self.pool.lookups, "hits": self.pool.hits,
+            "hit_tokens": self.pool.hit_tokens,
+            "evictions": self.pool.evictions,
+            "cow_copies": self.pool.cow_copies,
+            "compute_tokens": self.engine.compute_tokens,
+            "reused_tokens": self.engine.reused_tokens,
+        }
+
     def run_batch(self) -> List[Tuple[ServeRequest, PrefillOutput]]:
         if not self.forming:
             return []
         batch = self.forming
         self.forming = []
-        frames = ([r.frames for r in batch]
-                  if batch and batch[0].frames is not None else None)
-        outs = self.engine.run([r.tokens for r in batch], frames=frames)
-        ready = []
-        for req, out in zip(batch, outs):
+        ready: List[Tuple[ServeRequest, PrefillOutput]] = []
+        cold: List[ServeRequest] = []
+        warm: List[Tuple[ServeRequest, int]] = []
+        for req in batch:
+            cached = 0
+            if self.prefix_cache:
+                cached = self.pool.acquire_prefix(
+                    req.rid, req.tokens, namespace=_frames_ns(req))
+            (warm.append((req, cached)) if cached else cold.append(req))
+        if cold:
+            frames = ([r.frames for r in cold]
+                      if cold[0].frames is not None else None)
+            outs = self.engine.run([r.tokens for r in cold], frames=frames)
+            for req, out in zip(cold, outs):
+                if out.k is not None:
+                    blocks = self.pool.alloc(req.rid, out.prompt_len)
+                    self.pool.write_prefill(blocks, out.k, out.v)
+                    if self.prefix_cache:
+                        self.pool.insert_prefix(
+                            req.rid, req.tokens,
+                            namespace=_frames_ns(req))
+                ready.append((req, out))
+        for req, cached in warm:
+            # hit: gather the cached prefix KV (Pallas kv_gather), run the
+            # forward over only the uncached suffix, write the suffix KV
+            # into freshly allocated blocks (shared blocks stay read-only)
+            pre_blocks = self.pool.owned(req.rid)
+            buf = self.pool.gather_contiguous(pre_blocks)[:, :cached]
+            out = self.engine.run_suffix(req.tokens[cached:], buf,
+                                         frames=req.frames)
+            self.pool.alloc_to(req.rid, out.prompt_len)
+            self.pool.write_tokens(self.pool.owned(req.rid), cached,
+                                   out.k[:, cached:], out.v[:, cached:])
+            self.pool.insert_prefix(req.rid, req.tokens,
+                                    namespace=_frames_ns(req))
+            ready.append((req, out))
+        order = {id(r): i for i, r in enumerate(batch)}
+        ready.sort(key=lambda pair: order[id(pair[0])])
+        for req, out in ready:
             req.generated.append(out.first_token)
             if req.on_token:
                 req.on_token(out.first_token)
-            if out.k is not None:
-                blocks = self.pool.alloc(req.rid, out.prompt_len)
-                self.pool.write_prefill(blocks, out.k, out.v)
-            ready.append((req, out))
         self.waiting.extend(ready)
         return ready
 

@@ -58,13 +58,40 @@ class PrefillOutput:
 
 class PrefillEngine:
     """Batched prefill on real params; emits per-request KV + states
-    (+ cross-attention KV for encoder-decoder archs)."""
+    (+ cross-attention KV for encoder-decoder archs).
+
+    ``run_suffix`` is the prefix-reuse fast path: given a gathered prefix
+    KVCache it runs the forward pass over only the uncached suffix
+    tokens. ``compute_tokens`` counts tokens actually pushed through the
+    forward pass (the parity tests and benchmarks assert savings on it).
+    """
 
     def __init__(self, cfg: ModelConfig, params: Tree):
         self.cfg = cfg
         self.params = params
         self._attn_order = _attn_layer_order(cfg)
         self._mamba_order = _mamba_layer_order(cfg)
+        self.compute_tokens = 0      # tokens run through the forward pass
+        self.reused_tokens = 0       # tokens served from a prefix hit
+        self.prefix_prefills = 0     # suffix-only prefills executed
+
+    @property
+    def supports_prefix_reuse(self) -> bool:
+        """Prefix KV reuse needs a pure-attention stack: SSM/hybrid
+        layers carry recurrent state that a KV prefix cannot restore, and
+        attn-free stacks have no KV to reuse. Encoder-decoder is fine
+        (the encoder reruns; only decoder self-attn KV is reused).
+        Capacity-dispatch MoE is also gated off: its token dropping
+        depends on the whole batch's T, so suffix-only prefill could
+        silently change outputs — only the dropless "sorted" dispatch is
+        prefix-transparent."""
+        if not self._attn_order or self._mamba_order:
+            return False
+        m = self.cfg.moe
+        if m is not None and m.dispatch == "capacity" \
+                and any(self.cfg.moe_layer_mask()):
+            return False
+        return True
 
     def run(self, token_lists: Sequence[Sequence[int]],
             frames: Optional[Sequence] = None) -> List[PrefillOutput]:
@@ -94,6 +121,7 @@ class PrefillEngine:
         for i, t in enumerate(token_lists):
             toks[i, :len(t)] = t
         batch = {"tokens": jnp.asarray(toks)}
+        self.compute_tokens += b * s
         if cfg.is_encoder_decoder:
             assert frames is not None, "enc-dec prefill needs frames"
             batch["frames"] = jnp.stack([jnp.asarray(f) for f in frames])
@@ -130,6 +158,60 @@ class PrefillEngine:
             outs.append(PrefillOutput(int(first[i]), k, v, mstate, ln,
                                       cross))
         return outs
+
+    def run_suffix(self, suffix_tokens: Sequence[int], prefix_kv: jax.Array,
+                   frames: Optional[object] = None) -> PrefillOutput:
+        """Suffix-only prefill after a prefix hit.
+
+        ``prefix_kv``: (attn_layers, plen, 2*kv_dim) — the cached prefix
+        KVCache gathered from the paged pool (kernels.kv_gather), K and V
+        packed along the last axis exactly as the pool stores them. Runs
+        the forward pass over only ``suffix_tokens`` with every attention
+        sublayer attending over prefix ++ suffix; returns a PrefillOutput
+        whose k/v cover the FULL prompt (prefix stitched back on) so the
+        transfer/decode path downstream is unchanged.
+        """
+        cfg = self.cfg
+        assert self.supports_prefix_reuse, cfg.name
+        s = len(suffix_tokens)
+        assert s >= 1, "prefix hit must leave at least one suffix token"
+        plen = int(prefix_kv.shape[1])
+        kvd = cfg.kv_dim
+        k_pre, v_pre = prefix_kv[..., :kvd], prefix_kv[..., kvd:]
+        period = block_period(cfg)
+        nblk = num_blocks(cfg)
+        attn_idx = {pair: li for li, pair in enumerate(self._attn_order)}
+        prefix: Tree = {}
+        for sb in range(period):
+            ks = jnp.stack([k_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
+            vs = jnp.stack([v_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
+            # (num_blocks, b=1, plen, kv_dim), scanned alongside params
+            prefix[f"sub{sb}"] = {"k": ks[:, None], "v": vs[:, None]}
+        batch = {"tokens": jnp.asarray([list(suffix_tokens)], jnp.int32)}
+        if cfg.is_encoder_decoder:
+            assert frames is not None, "enc-dec prefill needs frames"
+            batch["frames"] = jnp.asarray(frames)[None]
+        first, cache = forward_prefill(
+            cfg, self.params, batch,
+            last_index=jnp.asarray([s - 1]), prefix=prefix, prefix_len=plen)
+        self.compute_tokens += s
+        self.reused_tokens += plen
+        self.prefix_prefills += 1
+        layers = cache["layers"]
+        k_suf = jnp.stack([layers[f"sub{sb}"]["k"][bk, 0, :s]
+                           for bk, sb in self._attn_order])
+        v_suf = jnp.stack([layers[f"sub{sb}"]["v"][bk, 0, :s]
+                           for bk, sb in self._attn_order])
+        k = jnp.concatenate([k_pre.astype(k_suf.dtype), k_suf], axis=1)
+        v = jnp.concatenate([v_pre.astype(v_suf.dtype), v_suf], axis=1)
+        cross: Optional[Tree] = None
+        if cfg.is_encoder_decoder:
+            cross = {}
+            for bk in range(nblk):
+                for sb in range(period):
+                    c = layers[f"sub{sb}"]
+                    cross[(bk, sb)] = (c["xk"][bk, 0], c["xv"][bk, 0])
+        return PrefillOutput(int(first[0]), k, v, {}, plen + s, cross)
 
 
 class DecodeEngine:

@@ -10,10 +10,13 @@ actual engines rather than the discrete-event simulator:
 
 Each ServeGroup binds one scenario tag to its own prefill/decode nodes
 registered in the MetaStore (the Zookeeper role), so prefill/decode
-processing stays similar within a group. Ingress uses on-demand
-rejection forwarding: least-SSE-connections first within the request's
-scenario group, then across groups when the home group is saturated
+processing stays similar within a group — and the group's prefill pools
+keep that scenario's prefix KVCaches hot (§2.2.1): ingress prefers the
+node with the longest cached prefix (suffix-only prefill on a hit, see
+serving/kvcache.py), then least SSE connections, with on-demand
+rejection forwarding across groups when the home group is saturated
 (§3.5 fallback), else the request waits at the gateway.
+ServeGroup.prefix_stats() aggregates hit-rate / reused-token counters.
 
 A RatioAdjuster performs runtime P/D ratio adjustment per group: it
 compares the deployed ratio against the Eq.1 optimum
@@ -114,7 +117,11 @@ class ServeGroup:
 
     # ------------------------------- ingress (on-demand rejection, §3.5)
     def offer(self, req: ServeRequest) -> bool:
-        for p in sorted(self.prefills, key=lambda x: x.sse_connections):
+        # prefix affinity first (a node holding the request's prefix
+        # KVCache hot serves it suffix-only), then least SSE connections
+        for p in sorted(self.prefills,
+                        key=lambda x: (-x.prefix_affinity(req),
+                                       x.sse_connections)):
             if p.draining:
                 continue   # logical removal: not a rejection
             if p.offer(req):
@@ -226,14 +233,31 @@ class ServeGroup:
             b_d=b_d, gen_tokens=max(_mean(self.gen_tokens[-64:]), 1.0),
             xi=0.0)
 
+    def prefix_stats(self) -> Dict[str, float]:
+        """Aggregated prefix-reuse stats over this group's live prefill
+        nodes (per-scenario index: routing affinity keeps a scenario's
+        prefixes hot inside its own group, Fig. 1b)."""
+        agg = {"lookups": 0.0, "hits": 0.0, "hit_tokens": 0.0,
+               "evictions": 0.0, "cow_copies": 0.0,
+               "compute_tokens": 0.0, "reused_tokens": 0.0}
+        for p in self.prefills:
+            for k, v in p.prefix_stats().items():
+                agg[k] += v
+        agg["hit_rate"] = agg["hits"] / agg["lookups"] if agg["lookups"] \
+            else 0.0
+        return agg
+
     def stats(self) -> Dict[str, float]:
         n_p, n_d = self.ratio
+        pf = self.prefix_stats()
         return {
             "n_p": n_p, "n_d": n_d,
             "accepted": self.n_accepted,
             "rejections": self.rejections,
             "flips": len(self.flips),
             "ttft_ticks_mean": _mean(self.ttft_ticks),
+            "prefix_hit_rate": pf["hit_rate"],
+            "reused_tokens": pf["reused_tokens"],
         }
 
 
@@ -332,8 +356,11 @@ class ClusterFrontend:
                  profiles: Optional[Dict[str, InstanceProfile]] = None,
                  flat_iids: bool = False,
                  prefill_kwargs: Optional[dict] = None,
-                 decode_kwargs: Optional[dict] = None):
+                 decode_kwargs: Optional[dict] = None,
+                 prefix_cache: bool = True):
         topology = topology or {"default": (1, 1)}
+        prefill_kwargs = dict(prefill_kwargs or {})
+        prefill_kwargs.setdefault("prefix_cache", prefix_cache)
         if flat_iids and len(topology) > 1:
             raise ValueError("flat_iids would collide instance ids across "
                              "groups; it is only for single-group shims")

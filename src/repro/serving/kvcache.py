@@ -1,4 +1,5 @@
-"""Paged KV pool (PageAttention-style, paper §2.2.3).
+"""Paged KV pool (PageAttention-style, paper §2.2.3) with real
+block-level prefix reuse (paper §2.2.1).
 
 Storage layout: (layers, num_blocks, block_size, width) where width packs
 K and V (2 * kv_dim) — flat bytes per (layer, block), which is exactly what
@@ -7,12 +8,24 @@ the block-free transfer path linearizes.
 The gather (blocks -> contiguous) and scatter (contiguous -> blocks) hot
 paths go through the Pallas kernels in repro.kernels (interpret mode on
 CPU), with a pure-jnp fallback.
+
+Prefix reuse (``enable_prefix_cache=True``, prefill pools only): after a
+prefill, the request's full blocks are registered in a block-granular
+radix trie keyed on token-id chunks. A later request walks the trie,
+takes shared references (refcounted) on every fully-matched block, and
+copy-on-writes the partially-matched tail block into a private copy it
+may fill freely. ``release`` drops references instead of freeing shared
+blocks, leaving refcount-0 prefix blocks resident and LRU-evictable;
+allocation pressure evicts them (leaf-first) instead of raising
+``PoolExhausted`` outright. A block a live request holds is never
+evicted, freed, or overwritten. The placement-accounting twin of this
+mechanism (simulator side) lives in ``repro.core.prefix_cache``.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +38,26 @@ class PoolExhausted(RuntimeError):
     pass
 
 
+class _PrefixNode:
+    """One cached block in the radix trie. ``key`` is the exact token-id
+    chunk the block holds (len < block_size == partial tail leaf)."""
+
+    __slots__ = ("key", "block", "parent", "children", "last_use")
+
+    def __init__(self, key: Tuple[int, ...], block: int,
+                 parent: Optional["_PrefixNode"]):
+        self.key = key
+        self.block = block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        self.last_use = 0
+
+
 class PagedKVPool:
     def __init__(self, cfg: ModelConfig, *, num_blocks: int,
                  block_size: int = 16, dtype=jnp.float32,
-                 use_kernels: bool = True):
+                 use_kernels: bool = True,
+                 enable_prefix_cache: bool = False):
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
@@ -42,20 +71,52 @@ class PagedKVPool:
             (max(n_attn, 1), num_blocks, block_size, self.width), dtype)
         self._free: List[int] = list(range(num_blocks))
         self._owned: Dict[int, List[int]] = {}       # rid -> blocks
+        # ---- prefix index state (enable_prefix_cache only) ----
+        self.enable_prefix_cache = enable_prefix_cache and n_attn > 0
+        self._roots: Dict[Optional[str], _PrefixNode] = {}
+        self._cached: Dict[int, _PrefixNode] = {}    # block -> trie node
+        self._ref: Dict[int, int] = {}               # cached block -> holders
+        self._clock = 0
+        # observability
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        self.cow_copies = 0
 
     # ------------------------------------------------------------- alloc
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
+
     def blocks_for_tokens(self, tokens: int) -> int:
         return max(1, math.ceil(tokens / self.block_size))
 
-    def alloc(self, rid: int, tokens: int) -> List[int]:
-        n = self.blocks_for_tokens(tokens)
+    def _take_free(self, n: int) -> List[int]:
+        """Pop n free blocks, evicting LRU refcount-0 prefix blocks under
+        pressure instead of failing outright."""
+        while len(self._free) < n and self._evict_one():
+            pass
         if n > len(self._free):
-            raise PoolExhausted(f"need {n} blocks, have {len(self._free)}")
-        blocks = [self._free.pop() for _ in range(n)]
+            raise PoolExhausted(f"need {n} blocks, have {len(self._free)} "
+                                f"free and nothing evictable")
+        return [self._free.pop() for _ in range(n)]
+
+    def alloc(self, rid: int, tokens: int) -> List[int]:
+        blocks = self._take_free(self.blocks_for_tokens(tokens))
+        self._owned.setdefault(rid, []).extend(blocks)
+        return blocks
+
+    def alloc_to(self, rid: int, tokens: int) -> List[int]:
+        """Grow rid's allocation so it covers `tokens` total tokens
+        (suffix blocks after a prefix hit)."""
+        have = len(self._owned.get(rid, []))
+        need = max(0, self.blocks_for_tokens(tokens) - have)
+        blocks = self._take_free(need)
         self._owned.setdefault(rid, []).extend(blocks)
         return blocks
 
@@ -64,27 +125,203 @@ class PagedKVPool:
         """Grow a request's allocation (decode appends)."""
         have = self.blocks_for_tokens(extra_tokens_from)
         need = self.blocks_for_tokens(to_tokens)
-        out = []
-        for _ in range(need - have):
-            if not self._free:
-                raise PoolExhausted("pool exhausted on extend")
-            b = self._free.pop()
-            self._owned.setdefault(rid, []).append(b)
-            out.append(b)
+        out = self._take_free(max(0, need - have))
+        self._owned.setdefault(rid, []).extend(out)
         return out
 
     def release(self, rid: int):
         for b in self._owned.pop(rid, []):
-            self._free.append(b)
+            if b in self._cached:
+                # shared prefix block: drop the reference, keep it cached
+                # (refcount 0 == LRU-evictable, never freed while held)
+                self._ref[b] = max(0, self._ref.get(b, 0) - 1)
+            else:
+                self._free.append(b)
 
     def owned(self, rid: int) -> List[int]:
         return list(self._owned.get(rid, []))
 
     def invariant_ok(self) -> bool:
-        owned = [b for bs in self._owned.values() for b in bs]
-        all_ids = sorted(owned + self._free)
-        return (all_ids == list(range(self.num_blocks))
-                and len(set(owned)) == len(owned))
+        owned_all = [b for bs in self._owned.values() for b in bs]
+        cached = set(self._cached)
+        private = [b for b in owned_all if b not in cached]
+        ok = len(private) == len(set(private))       # unique private owner
+        counts: Dict[int, int] = {}
+        for b in owned_all:
+            if b in cached:
+                counts[b] = counts.get(b, 0) + 1
+        ok &= all(self._ref.get(b, 0) == counts.get(b, 0) for b in cached)
+        ok &= len(self._free) == len(set(self._free))
+        ok &= not (set(self._free) & (set(private) | cached))
+        ok &= sorted(set(self._free) | set(private) | cached) \
+            == list(range(self.num_blocks))
+        return bool(ok)
+
+    # ----------------------------------------------------- prefix index
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def _match(self, tokens: Sequence[int], namespace: Optional[str]
+               ) -> Tuple[List[_PrefixNode], Optional[Tuple[_PrefixNode,
+                                                            int]]]:
+        """Walk the trie: fully-matched whole blocks, plus the best
+        partial tail candidate (node, common-prefix token count)."""
+        root = self._roots.get(namespace)
+        if root is None:
+            return [], None
+        toks = tuple(int(t) for t in tokens)
+        bs = self.block_size
+        chain: List[_PrefixNode] = []
+        node = root
+        i = 0
+        while True:
+            rest = toks[i:]
+            if not rest:
+                return chain, None
+            child = node.children.get(rest[:bs])
+            if child is not None and len(rest) >= bs:
+                chain.append(child)
+                node = child
+                i += bs
+                continue
+            # tail: the child sharing the longest common token prefix
+            # with the remaining tokens (full or partial block — either
+            # way the overlap is COW-copied, never referenced in place)
+            best, best_l = None, 0
+            for key, ch in node.children.items():
+                l = 0
+                for a, b in zip(key, rest):
+                    if a != b:
+                        break
+                    l += 1
+                if l > best_l:
+                    best, best_l = ch, l
+            return chain, ((best, best_l) if best is not None else None)
+
+    def peek_prefix(self, tokens: Sequence[int],
+                    namespace: Optional[str] = None) -> int:
+        """Read-only match length in tokens (for routing affinity);
+        does not touch refcounts or recency."""
+        if not self.enable_prefix_cache or len(tokens) < 2:
+            return 0
+        full, tail = self._match(tokens, namespace)
+        got = len(full) * self.block_size + (tail[1] if tail else 0)
+        return min(got, len(tokens) - 1)
+
+    def acquire_prefix(self, rid: int, tokens: Sequence[int],
+                       namespace: Optional[str] = None) -> int:
+        """Prefix lookup at admission: matched whole blocks become shared
+        (refcounted) leading blocks of rid's allocation; a partial tail
+        match is copy-on-written into a private block. Returns the cached
+        token count (always < len(tokens): the last prompt token is
+        recomputed so prefill still yields first-token logits)."""
+        if not self.enable_prefix_cache or len(tokens) < 2:
+            return 0
+        self.lookups += 1
+        full, tail = self._match(tokens, namespace)
+        bs = self.block_size
+        limit = len(tokens) - 1
+        n_full = min(len(full), limit // bs)
+        tail_node, rem = None, 0
+        if n_full < len(full):
+            # a whole-block match truncated by `limit` turns into a COW
+            tail_node, rem = full[n_full], min(bs, limit - n_full * bs)
+        elif tail is not None:
+            tail_node, rem = tail[0], min(tail[1], limit - n_full * bs)
+        if rem <= 0:
+            tail_node = None
+            rem = 0
+        if n_full * bs + rem <= 0:
+            return 0
+        blocks: List[int] = []
+        for nd in full[:n_full]:
+            self._ref[nd.block] = self._ref.get(nd.block, 0) + 1
+            blocks.append(nd.block)
+        if tail_node is not None:
+            # pin the source so eviction pressure from _take_free cannot
+            # reclaim it mid-copy
+            self._ref[tail_node.block] = self._ref.get(tail_node.block,
+                                                       0) + 1
+            try:
+                dst = self._take_free(1)[0]
+            except PoolExhausted:
+                # no room for the COW tail: degrade to the whole-block
+                # hit (or a clean miss), rolling back refs not yet
+                # recorded in _owned — they would leak otherwise
+                dst = None
+            finally:
+                self._ref[tail_node.block] -= 1
+            if dst is None:
+                tail_node, rem = None, 0
+                if not blocks:
+                    return 0
+            else:
+                self.storage = self.storage.at[:, dst].set(
+                    self.storage[:, tail_node.block])
+                self.cow_copies += 1
+                blocks.append(dst)
+        cached = n_full * bs + rem
+        self._owned.setdefault(rid, []).extend(blocks)
+        self.hits += 1
+        self.hit_tokens += cached
+        self._touch(full[n_full - 1] if n_full else tail_node)
+        return cached
+
+    def insert_prefix(self, rid: int, tokens: Sequence[int],
+                      namespace: Optional[str] = None):
+        """Register rid's prefilled blocks in the trie so later requests
+        can share them. Blocks already shared (matched at acquire time)
+        are only recency-touched; private blocks become cached with the
+        owning request as their first reference."""
+        if not self.enable_prefix_cache:
+            return
+        blocks = self._owned.get(rid, [])
+        root = self._roots.setdefault(namespace, _PrefixNode((), -1, None))
+        toks = tuple(int(t) for t in tokens)
+        bs = self.block_size
+        node = root
+        self._clock += 1
+        for i, b in enumerate(blocks):
+            chunk = toks[i * bs:(i + 1) * bs]
+            if not chunk:
+                break
+            child = node.children.get(chunk)
+            if child is None:
+                if b in self._cached:
+                    break   # defensive: a block caches under one node only
+                child = _PrefixNode(chunk, b, node)
+                node.children[chunk] = child
+                self._cached[b] = child
+                self._ref[b] = self._ref.get(b, 0) + 1   # rid holds it
+            child.last_use = self._clock
+            if len(chunk) < bs:
+                break       # partial tail is a leaf
+            node = child
+
+    def _touch(self, node: Optional[_PrefixNode]):
+        self._clock += 1
+        while node is not None and node.key:
+            node.last_use = self._clock
+            node = node.parent
+
+    def _evict_one(self) -> bool:
+        """Free the LRU evictable trie leaf (refcount 0, no children).
+        Leaf-first ordering keeps every cached chain rooted."""
+        best: Optional[_PrefixNode] = None
+        for b, nd in self._cached.items():
+            if self._ref.get(b, 0) == 0 and not nd.children:
+                if best is None or nd.last_use < best.last_use:
+                    best = nd
+        if best is None:
+            return False
+        del self._cached[best.block]
+        self._ref.pop(best.block, None)
+        if best.parent is not None:
+            best.parent.children.pop(best.key, None)
+        self._free.append(best.block)
+        self.evictions += 1
+        return True
 
     # ---------------------------------------------------------- data I/O
     def write_prefill(self, blocks: Sequence[int], k: jax.Array,
@@ -97,6 +334,21 @@ class PagedKVPool:
             kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0)))
         kv = kv.reshape(L, len(blocks), self.block_size, self.width)
         self.storage = self.storage.at[:, jnp.asarray(blocks)].set(kv)
+
+    def write_tokens(self, blocks: Sequence[int], start: int,
+                     k: jax.Array, v: jax.Array):
+        """Write k/v (attn_layers, n, kv_dim) at token offset `start` of a
+        request's block list — the suffix write after a prefix hit. Only
+        blocks at/after `start` are touched, so shared prefix blocks are
+        never overwritten."""
+        L, n, kvd = k.shape
+        kv = jnp.concatenate([k, v], axis=-1).astype(self.dtype)
+        bs = self.block_size
+        toks = np.arange(start, start + n)
+        blk = jnp.asarray(np.asarray(blocks)[toks // bs])
+        off = jnp.asarray(toks % bs)
+        # single scatter: one buffer update regardless of span count
+        self.storage = self.storage.at[:, blk, off].set(kv)
 
     def append_token(self, blocks: Sequence[int], pos: int,
                      k_tok: jax.Array, v_tok: jax.Array):

@@ -1,0 +1,114 @@
+"""Property tests: refcount/eviction safety of the prefix-sharing
+PagedKVPool under random workloads (hypothesis; skipped via the
+conftest shim when hypothesis is absent).
+
+Invariants:
+  * a shared block is never freed or returned by the allocator while a
+    live request references it;
+  * free + uniquely-owned + cached always partitions num_blocks;
+  * eviction under pressure never evicts a block a live request holds.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_params
+from repro.serving.kvcache import PagedKVPool, PoolExhausted
+
+NUM_BLOCKS = 16
+BS = 4
+
+
+def _pool():
+    cfg, _ = reduced_params("granite-3-8b")
+    return PagedKVPool(cfg, num_blocks=NUM_BLOCKS, block_size=BS,
+                       enable_prefix_cache=True)
+
+
+def _live_shared_blocks(pool, live):
+    return {b for rid in live for b in pool.owned(rid)
+            if b in pool._cached}
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_refcount_eviction_safety(data):
+    pool = _pool()
+    live = set()
+    rid_next = 0
+    # tiny token alphabet + short prompts force prefix collisions
+    for _ in range(data.draw(st.integers(2, 25))):
+        op = data.draw(st.sampled_from(["admit", "release", "pressure"]))
+        if op == "release" and live:
+            rid = data.draw(st.sampled_from(sorted(live)))
+            pool.release(rid)
+            live.discard(rid)
+        elif op == "pressure":
+            # unrelated allocation: may evict refcount-0 prefix blocks,
+            # must never take a block a live request holds
+            held = {b for r in live for b in pool.owned(r)}
+            rid = 9000 + rid_next
+            rid_next += 1
+            try:
+                got = pool.alloc(rid, data.draw(st.integers(1, 24)))
+                assert not (set(got) & held)
+                live.add(rid)
+            except PoolExhausted:
+                pass
+        else:
+            rid = rid_next
+            rid_next += 1
+            toks = data.draw(st.lists(st.integers(0, 3), min_size=2,
+                                      max_size=20))
+            before = _live_shared_blocks(pool, live)
+            try:
+                cached = pool.acquire_prefix(rid, toks)
+                pool.alloc_to(rid, len(toks))
+            except PoolExhausted:
+                pool.release(rid)
+                continue
+            assert cached < len(toks)     # >=1 token always recomputed
+            # a prefix hit may only ADD references to shared blocks,
+            # never drop any other request's
+            assert before <= _live_shared_blocks(pool, live | {rid})
+            pool.insert_prefix(rid, toks)
+            live.add(rid)
+        # the partition invariant: free + private-owned + cached
+        assert pool.invariant_ok(), (pool._free, pool._owned,
+                                     sorted(pool._cached))
+    for rid in sorted(live):
+        pool.release(rid)
+    assert pool.invariant_ok()
+    # everything not cached is free again; cached blocks are evictable
+    assert pool.free_blocks + pool.cached_blocks == NUM_BLOCKS
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_full_pool_churn_recovers_all_blocks(seed):
+    """Admit/release churn at pool capacity: eviction keeps serving and
+    a final drain accounts for every block."""
+    rng = np.random.default_rng(seed)
+    pool = _pool()
+    live = []
+    for i in range(12):
+        toks = [int(t) for t in rng.integers(0, 4, rng.integers(2, 18))]
+        try:
+            pool.acquire_prefix(i, toks)
+            pool.alloc_to(i, len(toks))
+            pool.insert_prefix(i, toks)
+            live.append(i)
+        except PoolExhausted:
+            pool.release(i)
+            if live:
+                pool.release(live.pop(0))
+        assert pool.invariant_ok()
+    for rid in live:
+        pool.release(rid)
+    assert pool.invariant_ok()
+    assert pool.free_blocks + pool.cached_blocks == NUM_BLOCKS
+    # force a full drain of the cache via pressure
+    try:
+        pool.alloc(777, NUM_BLOCKS * BS)
+    except PoolExhausted:
+        pass
+    assert pool.invariant_ok()
