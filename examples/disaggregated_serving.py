@@ -68,18 +68,28 @@ def main():
           f"(cold would compute {4 * 21}tok), "
           f"cow={int(pf['cow_copies'])} evictions={int(pf['evictions'])}")
 
-    # ---- transfer-mode comparison on the single-group shim
-    for mode in ("block_free", "block_fixed"):
-        mc = MiniCluster(cfg, n_prefill=2, n_decode=2, transfer_mode=mode,
-                         link=LinkModel())
+    # ---- transfer-path comparison on the single-group shim: the
+    # overlapped layer-wise pipeline (default) vs the blocking modes
+    for label, kw in (("overlapped", dict(overlap_transfer=True)),
+                      ("block_free", dict(overlap_transfer=False,
+                                          transfer_mode="block_free")),
+                      ("block_fixed", dict(overlap_transfer=False,
+                                           transfer_mode="block_fixed"))):
+        mc = MiniCluster(cfg, n_prefill=2, n_decode=2, link=LinkModel(),
+                         **kw)
         reqs = workload(cfg, 10)
         t0 = time.time()
         mc.run(reqs, max_ticks=200)
-        xf = mc.xfer.stats
-        sim_d2d = float(np.mean([t.time_s for t in xf])) if xf else 0.0
-        msgs = int(np.mean([t.n_msgs for t in xf])) if xf else 0
-        print(f"  {mode:12s}: {sum(r.done for r in reqs)}/{len(reqs)} done, "
-              f"wall {time.time()-t0:.1f}s, modeled D2D "
+        if label == "overlapped":
+            tf = mc.frontend.groups["default"].transfer_stats()
+            sim_d2d = tf["admission_wait_mean_s"]
+            msgs = int(tf["link_msgs"] / max(tf["jobs_admitted"], 1))
+        else:
+            xf = mc.xfer.stats
+            sim_d2d = float(np.mean([t.time_s for t in xf])) if xf else 0.0
+            msgs = int(np.mean([t.n_msgs for t in xf])) if xf else 0
+        print(f"  {label:12s}: {sum(r.done for r in reqs)}/{len(reqs)} done, "
+              f"wall {time.time()-t0:.1f}s, D2D admission stall "
               f"{sim_d2d*1e3:.2f}ms over {msgs} msgs/transfer, "
               f"gateway rejections={mc.rejections}")
     print("first instance RoCE IPs:",

@@ -79,7 +79,16 @@ class SimDecode:
         self.pending_retrieval.append(req)
         nbytes = req.prompt_len * self.cfg.profile.kv_bytes_per_token
         block_bytes = self.cfg.block_tokens * self.cfg.profile.kv_bytes_per_token
-        t = self.sim.transfer_time(nbytes, block_bytes)
+        if self.cfg.transfer_mode == "block_free" \
+                and self.cfg.per_layer_transfer:
+            # per-layer triggering (Fig. 10): only the tail the prefill
+            # compute could not hide is paid after prefill-done — the
+            # SAME closed-form overlap model the real path's
+            # TransferScheduler reports (see tests/test_transfer.py)
+            t = self.cfg.link.per_layer_tail(
+                nbytes, self.cfg.layers, req.t_prefill_compute)
+        else:
+            t = self.sim.transfer_time(nbytes, block_bytes)
         self.sim.d2d_times.append(t)
 
         def done():
@@ -192,6 +201,8 @@ class SimPrefill:
                 self.prefix_cache.insert(r.prefix_id, r.prefix_len)
             total_tokens += r.prompt_len
         dt = self.cfg.profile.ttft(total_tokens, hit_tokens)
+        for r in batch:
+            r.t_prefill_compute = dt     # per-layer overlap window
         self.busy_time += dt
         self.sim.clock.schedule(dt, lambda: self._complete(batch))
 

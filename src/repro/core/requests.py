@@ -26,6 +26,7 @@ class Request:
     # ---- lifecycle (filled by the system) ----
     t_accept: float = -1.0
     t_prefill_done: float = -1.0
+    t_prefill_compute: float = 0.0   # batch compute time (overlap model)
     t_transfer_done: float = -1.0
     t_done: float = -1.0
     timed_out: bool = False

@@ -47,6 +47,43 @@ class LinkModel:
         ideal = nbytes / self.bandwidth
         return ideal / self.time(nbytes, n_msgs)
 
+    def per_layer_completion(self, nbytes: int, layers: int,
+                             compute_s: float) -> float:
+        """Finish time (relative to prefill START) of a per-layer-triggered
+        transfer overlapped with layer compute (Fig. 10).
+
+        Layer ``i`` of ``layers`` equal segments becomes sendable at
+        ``compute_s * (i+1)/layers``; the link ships segments FIFO, one
+        in flight at a time. This closed form is the SHARED overlap
+        model: the discrete-event simulator (core.cluster_sim) and the
+        real path's TransferScheduler (serving.transfer_sched) must both
+        report it for an uncontended single transfer — test_transfer.py
+        pins them together."""
+        layers = max(1, layers)
+        seg = self.time(nbytes / layers, 1)
+        t = 0.0
+        for i in range(layers):
+            t = max(t, compute_s * (i + 1) / layers) + seg
+        return t
+
+    def per_layer_tail(self, nbytes: int, layers: int,
+                       compute_s: float) -> float:
+        """Residual D2D wait AFTER prefill completes under per-layer
+        triggering — the part of the transfer compute could not hide."""
+        return max(0.0, self.per_layer_completion(nbytes, layers, compute_s)
+                   - compute_s)
+
+
+def layer_slices(layers: int, nbytes: int) -> List[Tuple[int, int]]:
+    """(byte_offset, byte_length) of each layer's slice of the linearized
+    block-free buffer (Fig. 10 offset/length arithmetic): the sender
+    gathers blocks into ONE contiguous (layers, tokens, width) buffer, so
+    layer ``i`` occupies one equal contiguous stripe."""
+    layers = max(1, layers)
+    assert nbytes % layers == 0, (nbytes, layers)
+    stride = nbytes // layers
+    return [(i * stride, stride) for i in range(layers)]
+
 
 @dataclass
 class TransferResult:

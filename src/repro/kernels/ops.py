@@ -12,6 +12,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.kernels import ref
 from repro.kernels.kv_gather import kv_gather_pallas
@@ -53,6 +54,28 @@ def kv_scatter(storage: jax.Array, buf: jax.Array,
     if _use_ref() or _interpret():
         return _kv_scatter_ref(storage, buf.astype(storage.dtype), idx)
     return kv_scatter_pallas(storage, buf, idx, interpret=False)
+
+
+# Per-layer-triggered transfer (paper Fig. 10): move ONE layer's stripe
+# of the linearized buffer while later layers are still prefilling. The
+# layer slice is taken OUTSIDE the kernel (a zero-copy lax.slice on the
+# leading axis), so the same gather/scatter kernels serve both the
+# whole-buffer and per-layer paths — on TPU they compile natively over
+# the single-layer view, off-TPU they route to the jitted bitwise ref.
+
+def kv_gather_layer(storage: jax.Array, idx: jax.Array,
+                    layer: int) -> jax.Array:
+    """storage: (L, NB, BS, W) -> (n*BS, W) stripe of ``layer``."""
+    return kv_gather(lax.slice_in_dim(storage, layer, layer + 1, axis=0),
+                     idx)[0]
+
+
+def kv_scatter_layer(storage: jax.Array, buf: jax.Array, idx: jax.Array,
+                     layer: int) -> jax.Array:
+    """Scatter one layer's (n*BS, W) stripe back into paged storage."""
+    row = kv_scatter(lax.slice_in_dim(storage, layer, layer + 1, axis=0),
+                     buf[None], idx)
+    return lax.dynamic_update_slice_in_dim(storage, row, layer, axis=0)
 
 
 def paged_attention(q: jax.Array, kv_pages: jax.Array,

@@ -27,6 +27,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--transfer", default="block_free",
                     choices=["block_free", "block_fixed"])
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="blocking in-tick transfer instead of the "
+                         "overlapped layer-wise pipeline")
     ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args(argv)
 
@@ -34,7 +37,8 @@ def main(argv=None) -> int:
     print(f"[serve] {cfg.name}: {a.prefills}P/{a.decodes}D "
           f"transfer={a.transfer}")
     mc = MiniCluster(cfg, n_prefill=a.prefills, n_decode=a.decodes,
-                     seed=a.seed, transfer_mode=a.transfer)
+                     seed=a.seed, transfer_mode=a.transfer,
+                     overlap_transfer=not a.no_overlap)
     rng = np.random.default_rng(a.seed)
     reqs = []
     for i in range(a.requests):
@@ -49,11 +53,13 @@ def main(argv=None) -> int:
     done = mc.run(reqs, max_ticks=500)
     dt = time.time() - t0
     ok = sum(r.done for r in done)
-    xf = mc.xfer.stats
+    tf = mc.frontend.groups["default"].transfer_stats()
+    n_tf = int(tf["jobs_admitted"])
+    path = "overlapped pipeline" if tf["overlapped"] else "blocking"
     print(f"[serve] {ok}/{len(done)} completed in {dt:.1f}s wall; "
           f"gateway rejections={mc.rejections}; "
-          f"transfers={len(xf)} mean_sim_d2d="
-          f"{np.mean([t.time_s for t in xf])*1e3 if xf else 0:.2f}ms")
+          f"transfers={n_tf} ({path}) mean_admission_wait="
+          f"{tf['admission_wait_mean_s']*1e3:.2f}ms")
     for r in done[:4]:
         print(f"  rid={r.rid} prompt[{len(r.tokens)}] -> {r.generated}")
     return 0 if ok == len(done) else 1

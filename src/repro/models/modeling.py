@@ -255,7 +255,7 @@ def mlp(p: Tree, x: jax.Array) -> jax.Array:
 MOE_TOKEN_CHUNK = 32768
 
 
-def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig
+def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1
             ) -> Tuple[jax.Array, jax.Array]:
     """Capacity-based top-k MoE with scatter dispatch, chunked over tokens.
 
@@ -263,9 +263,28 @@ def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig
     processed in token chunks (scan) so dispatch/one-hot/expert buffers stay
     bounded — unchunked, the 1M-token deepseek prefill needs ~100GiB/device
     of dispatch state.
+
+    ``rows`` > 1 marks x as ``rows`` independent batch rows of T//rows
+    tokens each: capacity dispatch then counts expert positions PER ROW,
+    so a request's outputs never depend on what it happens to be batched
+    with (batch-invariance — the engine-vs-oracle contract for serving,
+    where the oracle decodes each request alone).
     """
     T, d = x.shape
     if T > MOE_TOKEN_CHUNK:
+        if rows > 1:
+            # rows are independent by construction: scan row-by-row so
+            # only one row's dispatch state is live, and recurse with
+            # rows=1 so an over-long row still chunks internally
+            x3 = x.reshape(rows, T // rows, d)
+
+            @jax.checkpoint
+            def rbody(acc, xr):
+                yr, aux = moe_ffn(p, xr, cfg)
+                return acc + aux, yr
+
+            aux, ys = lax.scan(rbody, jnp.zeros((), jnp.float32), x3)
+            return ys.reshape(T, d), aux / rows
         chunk = max(c for c in range(1, MOE_TOKEN_CHUNK + 1) if T % c == 0)
         nc = T // chunk
         x3 = x.reshape(nc, chunk, d)
@@ -277,14 +296,14 @@ def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig
 
         aux, ys = lax.scan(body, jnp.zeros((), jnp.float32), x3)
         return ys.reshape(T, d), aux / nc
-    return _moe_dispatch(p, x, cfg)
+    return _moe_dispatch(p, x, cfg, rows)
 
 
-def _moe_dispatch(p: Tree, x: jax.Array, cfg: ModelConfig
+def _moe_dispatch(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1
                   ) -> Tuple[jax.Array, jax.Array]:
     if cfg.moe.dispatch == "sorted":
         return _moe_dispatch_sorted(p, x, cfg)
-    return _moe_dispatch_capacity(p, x, cfg)
+    return _moe_dispatch_capacity(p, x, cfg, rows)
 
 
 def _moe_router(p: Tree, x: jax.Array, cfg: ModelConfig):
@@ -326,41 +345,59 @@ def _moe_dispatch_sorted(p: Tree, x: jax.Array, cfg: ModelConfig
     return y, aux
 
 
-def _moe_dispatch_capacity(p: Tree, x: jax.Array, cfg: ModelConfig
-                           ) -> Tuple[jax.Array, jax.Array]:
+def _moe_dispatch_capacity(p: Tree, x: jax.Array, cfg: ModelConfig,
+                           rows: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style capacity scatter. With ``rows`` > 1, capacity slots
+    are counted independently per batch row (s = T // rows tokens each):
+    which tokens overflow C then depends only on the row itself, never on
+    co-batched rows — with rows == 1 the math reduces to the original
+    whole-buffer counting, so single-row callers are bit-identical."""
     m = cfg.moe
     T, d = x.shape
     E, K = m.num_experts, m.top_k
-    C = max(1, int(math.ceil(T * K / E * m.capacity_factor)))
+    R = max(1, rows)
+    assert T % R == 0, (T, R)
+    s = T // R
+    C = max(1, int(math.ceil(s * K / E * m.capacity_factor)))
     logits = (x @ p["router"]).astype(jnp.float32)        # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = lax.top_k(probs, K)                      # (T, K)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
-    # choice-major flattening: all first choices, then all second choices...
-    flat_e = idx.T.reshape(-1)                            # (K*T,)
-    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (K*T, E)
-    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1)           # (K*T, E)
-    pos_tok = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    # per-row choice-major flattening: within each row, all first
+    # choices, then all second choices...
+    flat_e = jnp.swapaxes(idx.reshape(R, s, K), 1, 2).reshape(R, K * s)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (R, K*s, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1)           # (R, K*s, E)
+    pos_tok = jnp.take_along_axis(pos_in_e, flat_e[..., None],
+                                  axis=2)[..., 0]         # (R, K*s)
     keep = pos_tok < C
-    slot = jnp.where(keep, flat_e * C + pos_tok, E * C)   # overflow -> dropped
+    row_base = (jnp.arange(R) * E * C)[:, None]
+    slot = jnp.where(keep, row_base + flat_e * C + pos_tok,
+                     R * E * C)                           # overflow -> dropped
+    slot = slot.reshape(-1)
+    keep = keep.reshape(-1)
 
-    x_kt = jnp.tile(x, (K, 1))                            # (K*T, d)
-    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(x_kt)
-    xe = buf[: E * C].reshape(E, C, d)
+    # (R, K*s, d) rows of x in the same per-row choice-major order
+    x_kt = jnp.tile(x.reshape(R, s, d), (1, K, 1)).reshape(R * K * s, d)
+    buf = jnp.zeros((R * E * C + 1, d), x.dtype).at[slot].add(x_kt)
+    xe = buf[: R * E * C].reshape(R, E, C, d)
     # canonical EP layout under *_ep act rules (no-op otherwise): expert
     # dim on `model`, capacity on `data` -> expert matmuls are local and
     # only the token<->capacity resharding (all-to-all) moves data.
+    xe = jnp.moveaxis(xe, 0, 1).reshape(E, R * C, d)
     xe = constrain(xe, ("expert_act", "cap_act", None))
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
         jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
     h = constrain(h, ("expert_act", "cap_act", None))
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
-    ye = constrain(ye, ("expert_act", "cap_act", None)).reshape(E * C, d)
+    ye = constrain(ye, ("expert_act", "cap_act", None))
+    ye = jnp.moveaxis(ye.reshape(E, R, C, d), 0, 1).reshape(R * E * C, d)
     ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
     y_kt = ye[slot] * keep[:, None].astype(ye.dtype)
-    gates_kt = gates.T.reshape(-1)                        # (K*T,)
-    y = (y_kt * gates_kt[:, None].astype(ye.dtype)).reshape(K, T, d).sum(0)
+    gates_kt = jnp.swapaxes(gates.reshape(R, s, K), 1, 2).reshape(-1)
+    y = (y_kt * gates_kt[:, None].astype(ye.dtype)) \
+        .reshape(R, K, s, d).sum(1).reshape(T, d)
 
     if m.num_shared_experts:
         y = y + mlp(p["shared"], x)
@@ -534,7 +571,10 @@ def _ffn_sublayer(p: Tree, h: jax.Array, cfg: ModelConfig, is_moe: bool):
     if is_moe:
         x = rmsnorm(h, p["norm2"], cfg.norm_eps)
         shp = x.shape
-        y, aux = moe_ffn(p["moe"], x.reshape(-1, shp[-1]), cfg)
+        # batch rows are independent requests: capacity dispatch must
+        # count expert slots per row (batch-invariant serving)
+        y, aux = moe_ffn(p["moe"], x.reshape(-1, shp[-1]), cfg,
+                         rows=shp[0] if len(shp) == 3 else 1)
         h = h + y.reshape(shp)
     elif cfg.d_ff > 0:
         h = h + mlp(p["mlp"], rmsnorm(h, p["norm2"], cfg.norm_eps))

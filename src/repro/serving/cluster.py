@@ -1,12 +1,14 @@
 """In-process mini-cluster nodes: the REAL data path, end to end.
 
-PrefillNode (real forward into a paged pool) -> block-free KVCache
-transfer between actual paged pools (Pallas gather/RecvScatter) ->
-DecodeNode (paged continuous batching) -> streamed tokens. The gateway
-over these nodes is the scenario-aware multi-group ClusterFrontend in
-repro.serving.frontend; MiniCluster below is its single-group
-compatibility shim. Cluster-SCALE behavior is the discrete-event
-simulator's job (repro.core.cluster_sim).
+PrefillNode (real forward into a paged pool, streaming per-layer KV in
+overlapped mode) -> block-free KVCache transfer between actual paged
+pools (Pallas gather/RecvScatter; overlapped layer-wise pipeline via
+repro.serving.transfer_sched by default, blocking in-tick transfer
+otherwise) -> DecodeNode (paged continuous batching) -> streamed
+tokens. The gateway over these nodes is the scenario-aware multi-group
+ClusterFrontend in repro.serving.frontend; MiniCluster below is its
+single-group compatibility shim. Cluster-SCALE behavior is the
+discrete-event simulator's job (repro.core.cluster_sim).
 """
 from __future__ import annotations
 
@@ -14,6 +16,7 @@ import hashlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.transfer import KVTransferEngine, LinkModel
@@ -68,6 +71,10 @@ class PrefillNode:
         self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
         self.sse_connections = 0
         self.draining = False        # pending role flip: no new traffic
+        # layer-streaming mode (overlapped transfer): per-rid payloads
+        # {attn_layer -> (tokens, width) kv stripe} and batch timing
+        self.staged: Dict[int, Dict[int, object]] = {}
+        self.batch_meta: Dict[int, Tuple[float, float]] = {}
 
     def idle(self) -> bool:
         return (len(self.forming) < self.batch_size
@@ -98,7 +105,8 @@ class PrefillNode:
             "reused_tokens": self.engine.reused_tokens,
         }
 
-    def run_batch(self) -> List[Tuple[ServeRequest, PrefillOutput]]:
+    def run_batch(self, collect_layers: bool = False
+                  ) -> List[Tuple[ServeRequest, PrefillOutput]]:
         if not self.forming:
             return []
         batch = self.forming
@@ -112,10 +120,22 @@ class PrefillNode:
                 cached = self.pool.acquire_prefix(
                     req.rid, req.tokens, namespace=_frames_ns(req))
             (warm.append((req, cached)) if cached else cold.append(req))
+
+        def _stash_for(rid):
+            def cb(_i, li, k_li, v_li, _frac):
+                self.staged.setdefault(rid, {})[li] = jnp.concatenate(
+                    [k_li, v_li], axis=-1)
+            return cb
+
         if cold:
             frames = ([r.frames for r in cold]
                       if cold[0].frames is not None else None)
-            outs = self.engine.run([r.tokens for r in cold], frames=frames)
+            on_layer = None
+            if collect_layers:
+                def on_layer(i, li, k_li, v_li, frac):
+                    _stash_for(cold[i].rid)(i, li, k_li, v_li, frac)
+            outs = self.engine.run([r.tokens for r in cold], frames=frames,
+                                   on_layer=on_layer)
             for req, out in zip(cold, outs):
                 if out.k is not None:
                     blocks = self.pool.alloc(req.rid, out.prompt_len)
@@ -131,8 +151,9 @@ class PrefillNode:
             # into freshly allocated blocks (shared blocks stay read-only)
             pre_blocks = self.pool.owned(req.rid)
             buf = self.pool.gather_contiguous(pre_blocks)[:, :cached]
-            out = self.engine.run_suffix(req.tokens[cached:], buf,
-                                         frames=req.frames)
+            out = self.engine.run_suffix(
+                req.tokens[cached:], buf, frames=req.frames,
+                on_layer=_stash_for(req.rid) if collect_layers else None)
             self.pool.alloc_to(req.rid, out.prompt_len)
             self.pool.write_tokens(self.pool.owned(req.rid), cached,
                                    out.k[:, cached:], out.v[:, cached:])
@@ -164,9 +185,17 @@ class DecodeNode:
     def can_admit(self) -> bool:
         return not self.draining and bool(self.engine.free_slots())
 
+    def free_slot_count(self) -> int:
+        return len(self.engine.free_slots())
+
     def admit(self, req: ServeRequest, out: PrefillOutput,
               src_pool: PagedKVPool, xfer: KVTransferEngine,
               *, mode: str = "block_free"):
+        """Synchronous (blocking) admission: the whole KVCache moves in
+        the caller's critical section. The overlapped path instead runs
+        through TransferScheduler, which allocates dst blocks up front,
+        scatters per-layer stripes as they land and calls finish_admit
+        when the last one does."""
         # allocate room for prompt + all new tokens, move KV block-free
         total = out.prompt_len + req.max_new_tokens + 1
         dst_blocks = self.pool.alloc(req.rid, total)
@@ -180,6 +209,11 @@ class DecodeNode:
                 xfer.transfer_block_fixed(src_pool, src_blocks, self.pool,
                                           dst_blocks[:n])
             src_pool.release(req.rid)
+        self.finish_admit(req, out)
+
+    def finish_admit(self, req: ServeRequest, out: PrefillOutput):
+        """Attach an already-transferred request (KV in self.pool, mamba
+        state / cross KV rides on ``out``) to a decode slot."""
         self.engine.admit(req.rid, out, self.pool.owned(req.rid))
         self.requests[req.rid] = req
 
@@ -209,12 +243,13 @@ class MiniCluster:
     def __init__(self, cfg: ModelConfig, *, n_prefill: int = 1,
                  n_decode: int = 1, seed: int = 0,
                  transfer_mode: str = "block_free",
-                 params=None, link: LinkModel = LinkModel()):
+                 params=None, link: LinkModel = LinkModel(),
+                 overlap_transfer: bool = True):
         from repro.serving.frontend import ClusterFrontend  # import cycle
         self.frontend = ClusterFrontend(
             cfg, topology={"default": (n_prefill, n_decode)}, seed=seed,
             transfer_mode=transfer_mode, params=params, link=link,
-            flat_iids=True)
+            flat_iids=True, overlap_transfer=overlap_transfer)
         self.cfg = cfg
         self.params = self.frontend.params
         self.transfer_mode = transfer_mode

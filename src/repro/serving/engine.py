@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,13 @@ from repro.models.params import block_period, num_blocks
 from repro.serving.kvcache import PagedKVPool
 
 Tree = dict
+
+# layer-streaming callback: (batch_index, attn_layer_index, k_layer
+# (tokens, kv_dim), v_layer, network_depth_fraction). Invoked in network
+# order as each attention layer's KV becomes available, so a transfer
+# scheduler can ship layer i while layer i+1 is still prefilling
+# (per-layer triggering, paper Fig. 10).
+OnLayer = Callable[[int, int, jax.Array, jax.Array, float], None]
 
 
 def _attn_layer_order(cfg: ModelConfig) -> List[Tuple[int, int]]:
@@ -75,6 +82,23 @@ class PrefillEngine:
         self.reused_tokens = 0       # tokens served from a prefix hit
         self.prefix_prefills = 0     # suffix-only prefills executed
 
+    def layer_fractions(self) -> List[float]:
+        """Network-depth completion fraction of each attention layer, in
+        network order: layer li's KV is producible once frac * T_prefill
+        of the batch's compute has elapsed. Static per config — the
+        transfer scheduler stamps segment ready-times with these."""
+        period = block_period(self.cfg)
+        total = num_blocks(self.cfg) * period
+        return [(bk * period + sb + 1) / total for bk, sb in self._attn_order]
+
+    def _emit_layers(self, on_layer: Optional[OnLayer], idx: int,
+                     k: Optional[jax.Array], v: Optional[jax.Array]):
+        """Yield one request's per-layer KV in network order."""
+        if on_layer is None or k is None:
+            return
+        for li, frac in enumerate(self.layer_fractions()):
+            on_layer(idx, li, k[li], v[li], frac)
+
     @property
     def supports_prefix_reuse(self) -> bool:
         """Prefix KV reuse needs a pure-attention stack: SSM/hybrid
@@ -94,10 +118,15 @@ class PrefillEngine:
         return True
 
     def run(self, token_lists: Sequence[Sequence[int]],
-            frames: Optional[Sequence] = None) -> List[PrefillOutput]:
+            frames: Optional[Sequence] = None,
+            on_layer: Optional[OnLayer] = None) -> List[PrefillOutput]:
         """Ragged batches are split into equal-length sub-batches: causal
         attention ignores right padding, but SSM/conv states would absorb
-        padded tokens (observed as hybrid-arch divergence)."""
+        padded tokens (observed as hybrid-arch divergence).
+
+        ``on_layer`` enables the layer-streaming mode: each request's
+        per-layer (k, v) is yielded in network order (see OnLayer) for
+        per-layer-triggered transfer."""
         by_len: Dict[int, List[int]] = {}
         for i, t in enumerate(token_lists):
             by_len.setdefault(len(t), []).append(i)
@@ -108,6 +137,7 @@ class PrefillEngine:
                 [frames[i] for i in idxs] if frames is not None else None)
             for i, o in zip(idxs, sub):
                 outs[i] = o
+                self._emit_layers(on_layer, i, o.k, o.v)
         return outs  # type: ignore[return-value]
 
     def _run_equal(self, token_lists: Sequence[Sequence[int]],
@@ -160,7 +190,8 @@ class PrefillEngine:
         return outs
 
     def run_suffix(self, suffix_tokens: Sequence[int], prefix_kv: jax.Array,
-                   frames: Optional[object] = None) -> PrefillOutput:
+                   frames: Optional[object] = None,
+                   on_layer: Optional[OnLayer] = None) -> PrefillOutput:
         """Suffix-only prefill after a prefix hit.
 
         ``prefix_kv``: (attn_layers, plen, 2*kv_dim) — the cached prefix
@@ -211,7 +242,11 @@ class PrefillEngine:
                 for sb in range(period):
                     c = layers[f"sub{sb}"]
                     cross[(bk, sb)] = (c["xk"][bk, 0], c["xv"][bk, 0])
-        return PrefillOutput(int(first[0]), k, v, {}, plen + s, cross)
+        out = PrefillOutput(int(first[0]), k, v, {}, plen + s, cross)
+        # stream the FULL prompt's layers (prefix stitched back on): the
+        # receiver's layout is identical to a cold prefill's
+        self._emit_layers(on_layer, 0, k, v)
+        return out
 
 
 class DecodeEngine:

@@ -18,6 +18,13 @@ rejection forwarding across groups when the home group is saturated
 (§3.5 fallback), else the request waits at the gateway.
 ServeGroup.prefix_stats() aggregates hit-rate / reused-token counters.
 
+KV hand-off runs through the overlapped layer-wise transfer pipeline by
+default (serving/transfer_sched.py, §3.6 Fig. 10): prefill streams
+per-layer KV into the scheduler, decode admission fires when the last
+segment lands, and per-group transfer_stats() ledgers admission waits,
+retries and failover requeues. ``overlap_transfer=False`` restores the
+blocking in-tick transfer.
+
 A RatioAdjuster performs runtime P/D ratio adjustment per group: it
 compares the deployed ratio against the Eq.1 optimum
 (repro.core.perf_model.optimal_ratio) on a profiled-in-advance
@@ -33,6 +40,7 @@ from __future__ import annotations
 
 import itertools
 import time
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -43,6 +51,7 @@ from repro.core.zookeeper import MetaStore
 from repro.models.config import ModelConfig
 from repro.models.params import init_params
 from repro.serving.cluster import DecodeNode, PrefillNode, ServeRequest
+from repro.serving.transfer_sched import TransferJob, TransferScheduler
 
 
 def _mean(xs: Sequence[float]) -> float:
@@ -63,6 +72,7 @@ class ServeGroup:
                  meta: MetaStore, xfer: KVTransferEngine, *,
                  n_prefill: int = 1, n_decode: int = 1,
                  transfer_mode: str = "block_free",
+                 overlap_transfer: bool = True,
                  iid_prefix: Optional[str] = None,
                  prefill_kwargs: Optional[dict] = None,
                  decode_kwargs: Optional[dict] = None):
@@ -73,6 +83,16 @@ class ServeGroup:
         self.meta = meta
         self.xfer = xfer
         self.transfer_mode = transfer_mode
+        # overlapped layer-wise transfer pipeline (Fig. 10): decode
+        # admission is event-driven (fires when the last layer lands)
+        # instead of blocking inside the tick's transfer stage
+        self.overlap_transfer = bool(overlap_transfer)
+        self.sched: Optional[TransferScheduler] = TransferScheduler(
+            xfer.link, seed=zlib.crc32(gid.encode()) & 0xFFFF,
+            pick_dst=self._sched_pick) if overlap_transfer else None
+        self.vclock = 0.0                          # virtual seconds
+        self.blocking_waits: List[float] = []      # sync-mode D2D stalls
+        self.n_blocking_admits = 0                 # monotonic (list trims)
         self.prefill_kwargs = dict(prefill_kwargs or {})
         self.decode_kwargs = dict(decode_kwargs or {})
         self._prefix = f"{gid}/" if iid_prefix is None else iid_prefix
@@ -131,41 +151,110 @@ class ServeGroup:
             self.rejections += 1
         return False
 
+    # ------------------------------------- transfer-pipeline callbacks
+    def _free_capacity(self, d: DecodeNode) -> int:
+        """Decode slots not yet spoken for (free minus in-flight jobs)."""
+        pend = self.sched.pending_for(d.iid) if self.sched else 0
+        return d.free_slot_count() - pend
+
+    def _pick_decode(self, exclude: Tuple[DecodeNode, ...] = ()
+                     ) -> Optional[DecodeNode]:
+        cands = [d for d in self.decodes
+                 if d not in exclude and d.can_admit()
+                 and self._free_capacity(d) > 0
+                 and not (self.sched
+                          and d.iid in self.sched.failed_nodes)]
+        return min(cands,
+                   key=lambda d: len(d.requests)
+                   + (self.sched.pending_for(d.iid) if self.sched else 0),
+                   default=None)
+
+    def _sched_pick(self, job: TransferJob) -> Optional[DecodeNode]:
+        """Fallback target for a requeued job: prefer ANOTHER node than
+        the one that drained/failed/conflicted; same node only if it is
+        healthy and the sole candidate."""
+        tgt = self._pick_decode(exclude=(job.dst,))
+        return tgt if tgt is not None else self._pick_decode()
+
+    def _on_admit(self, job: TransferJob):
+        job.dst.finish_admit(job.req, job.out)
+        self.gen_tokens.append(job.req.max_new_tokens)
+
     # --------------------------------------------------- per-tick stages
     def tick(self, tick_no: int):
-        # prefill batches (observed TTFT + batch-latency stats)
+        vt_tick_start = self.vclock
+        # prefill batches (observed TTFT + batch-latency stats); in
+        # overlapped mode the engine streams per-layer KV into the
+        # node's stage area and the batch start/duration is recorded so
+        # segment ready-times land UNDER the compute window
         for p in self.prefills:
             if not p.forming:
                 continue
+            batch_rids = [r.rid for r in p.forming]
+            t0v = self.vclock
             t0 = time.perf_counter()
-            ready = p.run_batch()
-            self.prefill_batch_s.append(time.perf_counter() - t0)
+            ready = p.run_batch(collect_layers=self.overlap_transfer)
+            w = time.perf_counter() - t0
+            self.prefill_batch_s.append(w)
+            self.vclock += w
+            if self.sched is not None:       # only consumer of the meta
+                for rid in batch_rids:
+                    p.batch_meta[rid] = (t0v, w)
             for req, _ in ready:
                 if req.submit_tick >= 0:
                     self.ttft_ticks.append(tick_no - req.submit_tick)
-        # transfer to decode (async retrieval, least-loaded decode)
+        # transfer to decode (least-loaded decode with spare capacity)
         for p in self.prefills:
             remaining = []
             for req, out in p.waiting:
-                tgt = min((d for d in self.decodes if d.can_admit()),
-                          key=lambda d: len(d.requests), default=None)
+                tgt = self._pick_decode()
                 if tgt is None:
                     remaining.append((req, out))
                     continue
-                tgt.admit(req, out, p.pool, self.xfer,
-                          mode=self.transfer_mode)
-                self.gen_tokens.append(req.max_new_tokens)
+                if self.sched is not None:
+                    t0v, w = p.batch_meta.pop(req.rid, (self.vclock, 0.0))
+                    self.sched.begin(
+                        req, out, src_iid=p.iid, dst=tgt, t_start=t0v,
+                        compute_s=w, payloads=p.staged.pop(req.rid, None),
+                        fracs=p.engine.layer_fractions() or None,
+                        on_admit=self._on_admit)
+                    p.pool.release(req.rid)
+                else:
+                    tgt.admit(req, out, p.pool, self.xfer,
+                              mode=self.transfer_mode)
+                    stall = self.xfer.stats[-1].time_s if out.k is not None \
+                        else 0.0
+                    self.blocking_waits.append(stall)
+                    self.n_blocking_admits += 1
+                    self.vclock += stall
+                    self.gen_tokens.append(req.max_new_tokens)
                 p.sse_connections -= 1
             p.waiting = remaining
+        # pump the pipeline: completed last layers fire decode admission
+        if self.sched is not None:
+            self.sched.pump(self.vclock)
         # decode iteration
         for d in self.decodes:
             if not d.requests:
                 continue
             t0 = time.perf_counter()
             d.step()
-            self.decode_step_s.append(time.perf_counter() - t0)
+            w = time.perf_counter() - t0
+            self.decode_step_s.append(w)
+            self.vclock += w
+        # event-driven progress guarantee: if transfers are still in
+        # flight but nothing advanced the virtual clock this tick (group
+        # otherwise idle), jump to the next link event instead of
+        # spinning ticks
+        if self.sched is not None and not self.sched.idle():
+            self.sched.pump(self.vclock)
+            nxt = self.sched.next_event()
+            if nxt is not None and self.vclock <= vt_tick_start:
+                self.vclock = max(self.vclock, nxt)
+                self.sched.pump(self.vclock)
         for hist in (self.prefill_batch_s, self.decode_step_s,
-                     self.gen_tokens, self.ttft_ticks, self.accepted):
+                     self.gen_tokens, self.ttft_ticks, self.accepted,
+                     self.blocking_waits):
             if len(hist) > 512:
                 del hist[:-256]
         self._complete_flips(tick_no)
@@ -205,8 +294,9 @@ class ServeGroup:
             self.flips.append((tick_no, p.iid, d.iid, "P->D"))
             self.decodes.append(d)
         for d in [x for x in self.decodes if x.draining]:
-            if d.requests:
-                continue   # in-flight decodes must complete first
+            if d.requests or (self.sched is not None
+                              and self.sched.pending_for(d.iid)):
+                continue   # in-flight decodes/transfers must clear first
             self.decodes.remove(d)
             self.meta.remove_instance(t, d.iid)
             p = self._new_prefill(t)
@@ -247,9 +337,27 @@ class ServeGroup:
             else 0.0
         return agg
 
+    def transfer_stats(self) -> Dict[str, float]:
+        """Per-group D2D pipeline stats: overlapped mode reports the
+        scheduler's virtual-time ledger, blocking mode the synchronous
+        stalls paid inside the tick's critical section."""
+        if self.sched is not None:
+            out = dict(self.sched.stats())
+            out["overlapped"] = 1.0
+            return out
+        w = self.blocking_waits
+        return {
+            "overlapped": 0.0,
+            "jobs_admitted": float(self.n_blocking_admits),
+            "retries": 0.0, "requeues": 0.0,
+            "admission_wait_mean_s": _mean(w),
+            "link_busy_s": sum(w),
+        }
+
     def stats(self) -> Dict[str, float]:
         n_p, n_d = self.ratio
         pf = self.prefix_stats()
+        tf = self.transfer_stats()
         return {
             "n_p": n_p, "n_d": n_d,
             "accepted": self.n_accepted,
@@ -258,6 +366,9 @@ class ServeGroup:
             "ttft_ticks_mean": _mean(self.ttft_ticks),
             "prefix_hit_rate": pf["hit_rate"],
             "reused_tokens": pf["reused_tokens"],
+            "transfer_overlapped": tf["overlapped"],
+            "transfer_admission_wait_s": tf["admission_wait_mean_s"],
+            "transfer_requeues": tf["requeues"],
         }
 
 
@@ -357,7 +468,8 @@ class ClusterFrontend:
                  flat_iids: bool = False,
                  prefill_kwargs: Optional[dict] = None,
                  decode_kwargs: Optional[dict] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 overlap_transfer: bool = True):
         topology = topology or {"default": (1, 1)}
         prefill_kwargs = dict(prefill_kwargs or {})
         prefill_kwargs.setdefault("prefix_cache", prefix_cache)
@@ -378,6 +490,7 @@ class ClusterFrontend:
             g = ServeGroup(
                 f"g{i}", scenario, cfg, params, self.meta, self.xfer,
                 n_prefill=n_p, n_decode=n_d, transfer_mode=transfer_mode,
+                overlap_transfer=overlap_transfer,
                 iid_prefix="" if flat_iids else None,
                 prefill_kwargs=prefill_kwargs, decode_kwargs=decode_kwargs)
             self.groups[scenario] = g
@@ -442,3 +555,7 @@ class ClusterFrontend:
 
     def stats(self) -> Dict[str, Dict[str, float]]:
         return {sc: g.stats() for sc, g in self.groups.items()}
+
+    def transfer_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-group transfer/overlap ledgers (Fig. 10 observability)."""
+        return {sc: g.transfer_stats() for sc, g in self.groups.items()}

@@ -370,6 +370,38 @@ class PagedKVPool:
         return buf[:, :tokens]
 
     # ----------------------------------------------- contiguous transfer
+    def layer_nbytes(self, blocks: int) -> int:
+        """Wire bytes of ONE layer's stripe of a linearized n-block
+        buffer (Fig. 10 offset/length arithmetic works on these)."""
+        return blocks * self.block_size * self.width \
+            * jnp.dtype(self.dtype).itemsize
+
+    def gather_layer(self, blocks: Sequence[int], layer: int) -> jax.Array:
+        """(n*block_size, width) contiguous view of ONE layer's stripe —
+        the per-layer-triggered sender side (paper Fig. 10)."""
+        from repro.kernels import ops
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        if self.use_kernels:
+            return ops.kv_gather_layer(self.storage, idx, layer)
+        g = jnp.take(self.storage[layer], idx, axis=0)
+        n, bs, w = g.shape
+        return g.reshape(n * bs, w)
+
+    def scatter_layer(self, buf: jax.Array, blocks: Sequence[int],
+                      layer: int):
+        """RecvScatter of ONE layer's stripe into discrete blocks — the
+        per-layer-triggered receiver side."""
+        from repro.kernels import ops
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        if self.use_kernels:
+            self.storage = ops.kv_scatter_layer(
+                self.storage, buf.astype(self.dtype), idx, layer)
+        else:
+            t, w = buf.shape
+            n = len(blocks)
+            self.storage = self.storage.at[layer, idx].set(
+                buf.reshape(n, self.block_size, w).astype(self.dtype))
+
     def gather_contiguous(self, blocks: Sequence[int]) -> jax.Array:
         """(layers, n*block_size, width) contiguous buffer (C3 sender)."""
         from repro.kernels import ops

@@ -97,6 +97,54 @@ def test_multihop_conflicts_increase_variance():
     assert np.std(t2) > 10 * np.std(t1)
 
 
+# ------------------------------------------- overlap-model reconciliation
+def test_scheduler_reports_link_model_per_layer_timing():
+    """The simulator (LinkModel.per_layer_tail / time_only) and the real
+    path (TransferScheduler) must report the SAME per-layer overlap
+    model — the PR-2 HLO-cost drift failure mode was exactly this kind
+    of silent divergence between the model and the measured path."""
+    from types import SimpleNamespace
+
+    from repro.serving.transfer_sched import TransferScheduler
+
+    src, dst_pool, cfg = _pools()
+    link = LinkModel()
+    eng = KVTransferEngine(link)
+    tokens = 13
+    for compute_s in (0.0, 0.004, 10.0):
+        pool = PagedKVPool(cfg, num_blocks=32, block_size=4)
+        dst = SimpleNamespace(iid="D0", pool=pool, draining=False)
+        sched = TransferScheduler(link)
+        rng = np.random.default_rng(0)
+        L = pool.attn_layers
+        k = jnp.asarray(rng.normal(size=(L, tokens, cfg.kv_dim)),
+                        jnp.float32)
+        v = jnp.asarray(rng.normal(size=(L, tokens, cfg.kv_dim)),
+                        jnp.float32)
+        out = SimpleNamespace(k=k, v=v, prompt_len=tokens, mamba_state={},
+                              cross=None)
+        req = SimpleNamespace(rid=1, max_new_tokens=0)
+        job = sched.begin(req, out, src_iid="P0", dst=dst, t_start=0.0,
+                          compute_s=compute_s)
+        while not sched.idle():
+            sched.pump(sched.next_event())
+        nbytes = L * pool.layer_nbytes(pool.blocks_for_tokens(tokens))
+        # completion == the shared closed form (simulator model)
+        want = link.per_layer_completion(nbytes, L, compute_s)
+        assert abs(job.admitted_t - want) < 1e-12
+        # admission wait == the residual the simulator charges decode
+        assert abs(job.admission_wait
+                   - link.per_layer_tail(nbytes, L, compute_s)) < 1e-12
+        # with no compute to hide behind, the scheduler's busy time is
+        # exactly time_only(per_layer=True): n_msgs == layers
+        if compute_s == 0.0:
+            t_pl = eng.time_only(nbytes, block_bytes=4 * pool.width * 4,
+                                 layers=L, mode="block_free",
+                                 per_layer=True)
+            assert abs(job.admitted_t - t_pl) < 1e-12
+            assert abs(job.transfer_busy_s - t_pl) < 1e-12
+
+
 # ----------------------------------------------------------- pool safety
 @settings(max_examples=40, deadline=None)
 @given(data=st.data())
