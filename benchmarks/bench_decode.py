@@ -1,0 +1,93 @@
+"""Measured steady-state decode step latency: eager per-layer loop vs
+the fused jitted step (one donated device program per iteration).
+
+The §2.2.3 disaggregation math assumes decode runs as fast as the
+hardware allows; this section measures the real engines and emits
+``BENCH_decode.json`` so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+
+ARCHS = ["granite-3-8b", "jamba-1.5-large-398b"]
+SLOTS = 4
+WARMUP = 3
+ITERS = 20
+OUT_JSON = os.environ.get("BENCH_DECODE_JSON", "BENCH_decode.json")
+
+
+def _engine(cfg, params, outs, *, fused):
+    from repro.serving.engine import DecodeEngine
+    from repro.serving.kvcache import PagedKVPool
+    pool = PagedKVPool(cfg, num_blocks=96, block_size=4)
+    de = DecodeEngine(cfg, params, pool, max_slots=SLOTS, fused=fused)
+    for rid, out in enumerate(outs):
+        pool.alloc(rid, out.prompt_len + WARMUP + ITERS + 4)
+        if out.k is not None:
+            pool.write_prefill(
+                pool.owned(rid)[: (out.prompt_len + 3) // 4],
+                out.k, out.v)
+        de.admit(rid, out, pool.owned(rid))
+    return de
+
+
+def _steady_state_us(de) -> float:
+    for _ in range(WARMUP):                 # JIT warm + table bucket
+        de.step()
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        de.step()
+    return (time.perf_counter() - t0) / ITERS * 1e6
+
+
+def run() -> list:
+    import jax
+
+    from repro.models.modeling import decode_step_cache_size
+    from repro.models.params import init_params
+    from repro.serving.engine import PrefillEngine
+
+    rows: list[Row] = []
+    report = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(4)
+        prompts = [list(rng.integers(0, cfg.vocab_size, int(n)))
+                   for n in rng.integers(8, 14, SLOTS)]
+        outs = PrefillEngine(cfg, params).run(prompts)
+        compiles0 = decode_step_cache_size()
+        eager_us = _steady_state_us(
+            _engine(cfg, params, outs, fused=False))
+        fused_us = _steady_state_us(
+            _engine(cfg, params, outs, fused=True))
+        retraces = decode_step_cache_size() - compiles0
+        speedup = eager_us / max(fused_us, 1e-9)
+        tok_s = SLOTS / (fused_us / 1e6)
+        short = arch.split("-")[0]
+        rows += [
+            (f"decode/{short}_eager_step_us", eager_us,
+             f"slots={SLOTS}"),
+            (f"decode/{short}_fused_step_us", fused_us,
+             f"x{speedup:.1f}_vs_eager,retraces={retraces}"),
+            (f"decode/{short}_fused_tok_s", tok_s, "steady_state"),
+        ]
+        report[arch] = {
+            "eager_step_us": eager_us,
+            "fused_step_us": fused_us,
+            "speedup_x": speedup,
+            "fused_tokens_per_s": tok_s,
+            "fused_retraces": retraces,
+            "slots": SLOTS,
+            "iters": ITERS,
+        }
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return rows

@@ -5,9 +5,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks import (bench_e2e, bench_forwarding, bench_kernels,
-                        bench_pd_ratio, bench_prefix_cache, bench_recovery,
-                        bench_transfer)
+from benchmarks import (bench_decode, bench_e2e, bench_forwarding,
+                        bench_kernels, bench_pd_ratio, bench_prefix_cache,
+                        bench_recovery, bench_transfer)
 from benchmarks.common import emit
 
 ALL = {
@@ -16,6 +16,7 @@ ALL = {
     "pd_ratio": bench_pd_ratio,       # Fig 12, 13a
     "prefix": bench_prefix_cache,     # Fig 1b, 3a
     "e2e": bench_e2e,                 # 6.7x / 60% headline
+    "decode": bench_decode,           # fused vs eager decode step
     "recovery": bench_recovery,       # Fig 13b/c/d
     "kernels": bench_kernels,         # kernel microbench
 }

@@ -78,12 +78,31 @@ def kv_scatter_layer(storage: jax.Array, buf: jax.Array, idx: jax.Array,
     return lax.dynamic_update_slice_in_dim(storage, row, layer, axis=0)
 
 
+# Decode attention routes like kv_gather/kv_scatter: off-TPU the jitted
+# pure-jnp ref IS the data path (the Pallas grid interpreter re-traces
+# the whole page loop per call on the decode hot loop), on TPU the
+# kernel compiles natively. ``paged_attention_inline`` is the traceable
+# form for use INSIDE an enclosing jit (the fused decode step): same
+# math, no nested jit boundary — so the eager per-layer loop and the
+# fused step share bitwise-identical attention on every backend.
+_paged_attention_ref = jax.jit(ref.paged_attention)
+
+
+def paged_attention_inline(q: jax.Array, kv_pages: jax.Array,
+                           block_table: jax.Array,
+                           lens: jax.Array) -> jax.Array:
+    if _use_ref() or _interpret():
+        return ref.paged_attention(q, kv_pages, block_table, lens)
+    return paged_attention_pallas(q, kv_pages, block_table, lens,
+                                  interpret=False)
+
+
 def paged_attention(q: jax.Array, kv_pages: jax.Array,
                     block_table: jax.Array, lens: jax.Array) -> jax.Array:
-    if _use_ref():
-        return jax.jit(ref.paged_attention)(q, kv_pages, block_table, lens)
+    if _use_ref() or _interpret():
+        return _paged_attention_ref(q, kv_pages, block_table, lens)
     return paged_attention_pallas(q, kv_pages, block_table, lens,
-                                  interpret=_interpret())
+                                  interpret=False)
 
 
 _flash_prefill_ref = jax.jit(ref.flash_prefill,

@@ -106,5 +106,41 @@ def cache_num_bytes(cfg: ModelConfig, batch: int, seq: int, *,
                if shape != ())
 
 
+def decode_slot_state(cfg: ModelConfig, max_slots: int,
+                      dtype=jnp.float32) -> Tree:
+    """Zeroed per-slot decode state for the serving DecodeEngine, in the
+    fused-step layout: {"sub{i}": {...}} with every leaf stacked on a
+    leading num_blocks axis, batch dim == max_slots — the fixed-shape
+    twin of the lockstep decode cache (KV lives in the paged pool
+    instead, so attention sublayers carry no entry here). Mamba conv
+    tails + SSD state for SSM sublayers; enc-dec adds the per-request
+    cross-attention KV to every sublayer.
+    """
+    nblk = num_blocks(cfg)
+    period = block_period(cfg)
+    kinds = cfg.layer_kinds()
+    layers: Tree = {}
+    for i in range(period):
+        c: Tree = {}
+        if kinds[i] != ATTN:
+            s = cfg.ssm_cfg
+            d_in = s.expand * cfg.d_model
+            gn = s.n_groups * s.d_state
+            nh = d_in // s.head_dim
+            k = s.conv_kernel
+            c["conv_x"] = jnp.zeros((nblk, max_slots, d_in, k - 1), dtype)
+            c["conv_b"] = jnp.zeros((nblk, max_slots, gn, k - 1), dtype)
+            c["conv_c"] = jnp.zeros((nblk, max_slots, gn, k - 1), dtype)
+            c["state"] = jnp.zeros(
+                (nblk, max_slots, nh, s.d_state, s.head_dim), jnp.float32)
+        if cfg.is_encoder_decoder:
+            c["xk"] = jnp.zeros(
+                (nblk, max_slots, cfg.encoder_seq, cfg.kv_dim), dtype)
+            c["xv"] = jnp.zeros(
+                (nblk, max_slots, cfg.encoder_seq, cfg.kv_dim), dtype)
+        layers[f"sub{i}"] = c
+    return layers
+
+
 def _is_leaf(x) -> bool:
     return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)

@@ -848,6 +848,135 @@ def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
     return first, cache
 
 
+def forward_decode_step(cfg: ModelConfig, params: Tree, storage: jax.Array,
+                        block_tables: jax.Array, tokens: jax.Array,
+                        pos: jax.Array, active: jax.Array,
+                        slot_layers: Tree, *, block_size: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, Tree]:
+    """ONE fused decode iteration over a fixed slot set — the whole
+    per-token layer loop as a single device program (jitted by
+    ``decode_step_jit`` with the paged pool and slot buffers donated, so
+    XLA updates them in place instead of copying the pool once per
+    attention layer per token, which is what the eager loop pays).
+
+    storage:      (attn_layers|1, NB, BS, W) paged pool (K ++ V packed).
+    block_tables: (n_slots, T) int32, -1 padded; T is the engine's
+                  power-of-two table bucket (fixed shape between
+                  admissions -> no retrace in steady state).
+    tokens/pos:   (n_slots,) int32 — last emitted token / tokens so far.
+    active:       (n_slots,) bool slot mask. Inactive slots compute
+                  garbage rows (row-independent math everywhere,
+                  including per-row capacity MoE) and their pool writes
+                  are dropped via a -1 block id (scatter mode="drop").
+    slot_layers:  {"sub{i}": {...}} per-sublayer slot state stacked on a
+                  leading num_blocks axis (mamba conv/state tails,
+                  enc-dec cross KV), carried through the layer scan and
+                  updated in place at the block index.
+
+    Returns (next_token, new_tokens, new_pos, storage', slot_layers');
+    next_token is the on-device argmax — the caller's single host
+    transfer per step.
+    """
+    from repro.kernels import ops
+    bs = block_size
+    period = block_period(cfg)
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    nblk = num_blocks(cfg)
+    attn_subs = [i for i in range(period) if kinds[i] == ATTN]
+    # global attn-layer row of (blk, sub): layers are periodic, so the
+    # row index is linear in the block index for a fixed sub position
+    a_per_blk = len(attn_subs)
+    attn_rank = {s: r for r, s in enumerate(attn_subs)}
+    pool_dtype = storage.dtype
+
+    pos = pos.astype(jnp.int32)
+    lens = pos + 1                              # incl. the current token
+    # vectorized pool token-write indices: (block, offset) per slot
+    tok_blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
+                                  axis=1, mode="clip")[:, 0]
+    # inactive slots (and -1 table pads) write past the pool so the
+    # scatter's mode="drop" discards them — negative ids would WRAP
+    nb = storage.shape[1]
+    tok_blk = jnp.where(active & (tok_blk >= 0), tok_blk, nb)
+    tok_off = pos % bs
+    h = params["embed"][tokens].astype(jnp.float32)
+
+    def body(carry, xs):
+        hh, st, layers = carry
+        blkp, blk = xs
+        layers = dict(layers)
+        for i in range(period):
+            p = blkp[f"sub{i}"]
+            if kinds[i] == ATTN:
+                li = blk * a_per_blk + attn_rank[i]
+                x = rmsnorm(hh, p["norm"], cfg.norm_eps)
+                q, k, v = _attn_proj_qkv(p, x[:, None, :], cfg)
+                q4 = _split_heads(q[:, 0], cfg.num_heads)
+                k4 = _split_heads(k[:, 0], cfg.num_kv_heads)
+                q4 = rope(q4, pos, cfg.rope_theta)
+                k4 = rope(k4, pos, cfg.rope_theta)
+                kv_tok = jnp.concatenate(
+                    [_merge_heads(k4), v[:, 0]], -1).astype(pool_dtype)
+                # write-then-attend, exactly like the eager loop (the
+                # new value is read back, so in-place aliasing holds —
+                # no old-value hazard on the carried buffer)
+                st = st.at[li, tok_blk, tok_off].set(kv_tok, mode="drop")
+                page = lax.dynamic_index_in_dim(st, li, 0, keepdims=False)
+                o = ops.paged_attention_inline(
+                    q4.astype(pool_dtype), page, block_tables, lens)
+                hh = hh + _merge_heads(o).astype(hh.dtype) @ p["wo"]
+            else:
+                c = layers[f"sub{i}"]
+                mc_in = {k2: lax.dynamic_index_in_dim(c[k2], blk, 0, False)
+                         for k2 in ("conv_x", "conv_b", "conv_c", "state")}
+                hh, mc = mamba_sublayer_step(p, hh, mc_in, cfg)
+                cn = dict(c)
+                for k2, v2 in mc.items():
+                    cn[k2] = lax.dynamic_update_slice_in_dim(
+                        c[k2], v2.astype(c[k2].dtype)[None], blk, axis=0)
+                layers[f"sub{i}"] = cn
+            if cfg.is_encoder_decoder:
+                c = layers[f"sub{i}"]
+                x = rmsnorm(hh, p["norm_x"], cfg.norm_eps)
+                q4 = _split_heads(x @ p["wqx"], cfg.num_heads)
+                xk = lax.dynamic_index_in_dim(c["xk"], blk, 0, False)
+                xv = lax.dynamic_index_in_dim(c["xv"], blk, 0, False)
+                o = attention_decode(q4.astype(jnp.float32), xk, xv,
+                                     cfg.num_kv_heads,
+                                     jnp.asarray(cfg.encoder_seq),
+                                     window=None)
+                hh = hh + _merge_heads(o).astype(hh.dtype) @ p["wox"]
+            h2, _ = _ffn_sublayer(p, hh[:, None, :], cfg, moe_mask[i])
+            hh = h2[:, 0]
+        return (hh, st, layers), None
+
+    (h, storage, slot_layers), _ = lax.scan(
+        body, (h, storage, slot_layers),
+        (params["blocks"], jnp.arange(nblk)))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, h)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    new_tokens = jnp.where(active, nxt, tokens)
+    new_pos = pos + active.astype(jnp.int32)
+    return nxt, new_tokens, new_pos, storage, slot_layers
+
+
+# The public fused entry: pool storage and slot buffers are DONATED —
+# callers must re-adopt the returned arrays (DecodeEngine does). Retraces
+# only on a new (cfg, slot count, table bucket, pool shape) combination.
+decode_step_jit = partial(jax.jit, static_argnames=("cfg", "block_size"),
+                          donate_argnames=("storage", "slot_layers")
+                          )(forward_decode_step)
+
+
+def decode_step_cache_size() -> int:
+    """Live compilation-cache entries of the fused decode step (the
+    retrace-count guard in tests asserts deltas on this)."""
+    return decode_step_jit._cache_size()
+
+
 def forward_decode(cfg: ModelConfig, params: Tree, cache: Tree,
                    tokens: jax.Array, *, window: Optional[int] = None
                    ) -> Tuple[jax.Array, Tree]:

@@ -55,9 +55,11 @@ class ServeRequest:
 class PrefillNode:
     def __init__(self, iid: str, cfg: ModelConfig, params, *,
                  num_blocks: int = 128, block_size: int = 16,
-                 batch_size: int = 4, prefix_cache: bool = True):
+                 batch_size: int = 4, prefix_cache: bool = True,
+                 bucket_prefill: Optional[bool] = None):
         self.iid = iid
-        self.engine = PrefillEngine(cfg, params)
+        self.engine = PrefillEngine(cfg, params,
+                                    bucket_prefill=bucket_prefill)
         # prefix reuse needs a pure-attention stack (SSM/hybrid state is
         # not restorable from a KV prefix; attn-free has no KV at all) —
         # incompatible archs transparently bypass the index
@@ -173,12 +175,12 @@ class PrefillNode:
 class DecodeNode:
     def __init__(self, iid: str, cfg: ModelConfig, params, *,
                  num_blocks: int = 256, block_size: int = 16,
-                 max_slots: int = 8):
+                 max_slots: int = 8, fused: Optional[bool] = None):
         self.iid = iid
         self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
                                 block_size=block_size)
         self.engine = DecodeEngine(cfg, params, self.pool,
-                                   max_slots=max_slots)
+                                   max_slots=max_slots, fused=fused)
         self.requests: Dict[int, ServeRequest] = {}
         self.draining = False        # pending role flip: no new traffic
 

@@ -5,11 +5,27 @@ DecodeEngine runs continuous-batched paged decode (paged_attention kernel
 for attention layers, dense recurrent states for mamba layers, dense
 cross-attention KV for encoder-decoder archs). All assigned families are
 supported: dense / moe / ssm / hybrid / vlm-backbone / audio (enc-dec).
+
+Hot-loop shape discipline (the §2.2.3 perf model only holds if the
+engines run as fast as the hardware allows):
+
+  * prefill batches are padded to power-of-two length BUCKETS (for
+    pad-inert stacks) and run through one shared jitted forward, so the
+    compile count is O(num_buckets), not O(distinct prompt lengths);
+  * the decode iteration is ONE jitted, buffer-donated device program
+    (``models.modeling.decode_step_jit``) over fixed-shape slot state —
+    padded (max_slots,) token/position/mask arrays, a power-of-two
+    bucketed block table, and block-stacked mamba/cross slot buffers —
+    with exactly one device->host transfer per step (the argmax) and no
+    per-layer pool copies (the paged pool is donated into the step).
+    ``REPRO_DECODE=eager`` (or ``fused=False``) keeps the legacy eager
+    per-layer loop as the benchmark baseline; both paths are
+    token-identical by test.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+import os
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -17,10 +33,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.models.caches import decode_slot_state
 from repro.models.config import ATTN, ModelConfig
 from repro.models.modeling import (
-    _attn_proj_qkv, _ffn_sublayer, _merge_heads, _split_heads, lm_logits,
-    rmsnorm, rope, forward_prefill, mamba_sublayer_step)
+    _attn_proj_qkv, _ffn_sublayer, _merge_heads, _split_heads,
+    decode_step_jit, forward_prefill, lm_logits, mamba_sublayer_step,
+    rmsnorm, rope)
 from repro.models.params import block_period, num_blocks
 from repro.serving.kvcache import PagedKVPool
 
@@ -32,6 +50,21 @@ Tree = dict
 # scheduler can ship layer i while layer i+1 is still prefilling
 # (per-layer triggering, paper Fig. 10).
 OnLayer = Callable[[int, int, jax.Array, jax.Array, float], None]
+
+# smallest prefill length bucket; buckets double up to cfg.max_seq_len
+PREFILL_BUCKET_MIN = 16
+
+# One shared jitted prefill across every engine instance: the cache is
+# keyed on (cfg, shapes), so N serving nodes of the same arch compile
+# each length bucket once, not once per node.
+_jit_forward_prefill = jax.jit(
+    forward_prefill, static_argnames=("cfg", "window", "prefix_len"))
+
+
+def prefill_compile_count() -> int:
+    """Live compilation-cache entries of the shared jitted prefill (the
+    retrace-count guard asserts deltas on this under ragged traffic)."""
+    return _jit_forward_prefill._cache_size()
 
 
 def _attn_layer_order(cfg: ModelConfig) -> List[Tuple[int, int]]:
@@ -69,34 +102,62 @@ class PrefillEngine:
 
     ``run_suffix`` is the prefix-reuse fast path: given a gathered prefix
     KVCache it runs the forward pass over only the uncached suffix
-    tokens. ``compute_tokens`` counts tokens actually pushed through the
-    forward pass (the parity tests and benchmarks assert savings on it).
+    tokens. ``compute_tokens`` counts real prompt tokens pushed through
+    the forward pass — bucket padding is tracked separately in
+    ``padded_tokens`` (the parity tests and benchmarks assert savings on
+    the exact counter).
     """
 
-    def __init__(self, cfg: ModelConfig, params: Tree):
+    def __init__(self, cfg: ModelConfig, params: Tree, *,
+                 bucket_prefill: Optional[bool] = None,
+                 jit_prefill: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self._attn_order = _attn_layer_order(cfg)
         self._mamba_order = _mamba_layer_order(cfg)
-        self.compute_tokens = 0      # tokens run through the forward pass
+        # network-depth completion fraction per attention layer — static
+        # per config, computed ONCE (the transfer scheduler reads it per
+        # admitted request)
+        period = block_period(cfg)
+        total = num_blocks(cfg) * period
+        self._layer_fractions: Tuple[float, ...] = tuple(
+            (bk * period + sb + 1) / total for bk, sb in self._attn_order)
+        if bucket_prefill is None:
+            bucket_prefill = os.environ.get(
+                "REPRO_PREFILL_BUCKET", "1") != "0"
+        if jit_prefill is None:
+            jit_prefill = os.environ.get("REPRO_PREFILL_JIT", "1") != "0"
+        self.bucket_prefill = bool(bucket_prefill) and self.supports_bucketing
+        self.jit_prefill = bool(jit_prefill)
+        self.compute_tokens = 0      # real prompt tokens through the fwd
+        self.padded_tokens = 0       # bucket-padding tokens on top
         self.reused_tokens = 0       # tokens served from a prefix hit
         self.prefix_prefills = 0     # suffix-only prefills executed
 
-    def layer_fractions(self) -> List[float]:
+    def _prefill(self, batch: Tree, *, last_index: jax.Array,
+                 prefix: Optional[Tree] = None, prefix_len: int = 0):
+        if self.jit_prefill:
+            return _jit_forward_prefill(self.cfg, self.params, batch,
+                                        last_index=last_index,
+                                        prefix=prefix,
+                                        prefix_len=prefix_len)
+        return forward_prefill(self.cfg, self.params, batch,
+                               last_index=last_index, prefix=prefix,
+                               prefix_len=prefix_len)
+
+    def layer_fractions(self) -> Tuple[float, ...]:
         """Network-depth completion fraction of each attention layer, in
         network order: layer li's KV is producible once frac * T_prefill
         of the batch's compute has elapsed. Static per config — the
         transfer scheduler stamps segment ready-times with these."""
-        period = block_period(self.cfg)
-        total = num_blocks(self.cfg) * period
-        return [(bk * period + sb + 1) / total for bk, sb in self._attn_order]
+        return self._layer_fractions
 
     def _emit_layers(self, on_layer: Optional[OnLayer], idx: int,
                      k: Optional[jax.Array], v: Optional[jax.Array]):
         """Yield one request's per-layer KV in network order."""
         if on_layer is None or k is None:
             return
-        for li, frac in enumerate(self.layer_fractions()):
+        for li, frac in enumerate(self._layer_fractions):
             on_layer(idx, li, k[li], v[li], frac)
 
     @property
@@ -108,7 +169,10 @@ class PrefillEngine:
         Capacity-dispatch MoE is also gated off: its token dropping
         depends on the whole batch's T, so suffix-only prefill could
         silently change outputs — only the dropless "sorted" dispatch is
-        prefix-transparent."""
+        prefix-transparent. (Deliberately NOT delegated to
+        supports_bucketing: pad-inertness and prefix-transparency are
+        different properties that only coincidentally share conditions
+        today, and each gate may be lifted independently.)"""
         if not self._attn_order or self._mamba_order:
             return False
         m = self.cfg.moe
@@ -117,47 +181,76 @@ class PrefillEngine:
             return False
         return True
 
+    @property
+    def supports_bucketing(self) -> bool:
+        """Right-padding to a length bucket is exact only when padded
+        tokens are provably inert for the real rows: causal attention
+        ignores right pads and MLP / dropless-sorted MoE are per-token,
+        but SSM conv/scan states absorb pads, and capacity-dispatch MoE
+        counts expert slots over the (padded) row length. Those stacks
+        keep exact-length grouping."""
+        if self._mamba_order:
+            return False
+        m = self.cfg.moe
+        if m is not None and m.dispatch == "capacity" \
+                and any(self.cfg.moe_layer_mask()):
+            return False
+        return True
+
+    def _bucket_len(self, n: int) -> int:
+        b = PREFILL_BUCKET_MIN
+        while b < n:
+            b *= 2
+        return min(b, max(self.cfg.max_seq_len, n))
+
     def run(self, token_lists: Sequence[Sequence[int]],
             frames: Optional[Sequence] = None,
             on_layer: Optional[OnLayer] = None) -> List[PrefillOutput]:
-        """Ragged batches are split into equal-length sub-batches: causal
-        attention ignores right padding, but SSM/conv states would absorb
-        padded tokens (observed as hybrid-arch divergence).
+        """Ragged batches are grouped into padded power-of-two length
+        buckets when the arch is pad-inert (retrace count becomes
+        O(num_buckets) under tidal ragged traffic); otherwise into
+        equal-length sub-batches (causal attention ignores right
+        padding, but SSM/conv states would absorb padded tokens —
+        observed as hybrid-arch divergence).
 
         ``on_layer`` enables the layer-streaming mode: each request's
         per-layer (k, v) is yielded in network order (see OnLayer) for
         per-layer-triggered transfer."""
         by_len: Dict[int, List[int]] = {}
         for i, t in enumerate(token_lists):
-            by_len.setdefault(len(t), []).append(i)
+            key = self._bucket_len(len(t)) if self.bucket_prefill else len(t)
+            by_len.setdefault(key, []).append(i)
         outs: List[Optional[PrefillOutput]] = [None] * len(token_lists)
         for ln, idxs in by_len.items():
             sub = self._run_equal(
                 [token_lists[i] for i in idxs],
-                [frames[i] for i in idxs] if frames is not None else None)
+                [frames[i] for i in idxs] if frames is not None else None,
+                pad_to=ln if self.bucket_prefill else None)
             for i, o in zip(idxs, sub):
                 outs[i] = o
                 self._emit_layers(on_layer, i, o.k, o.v)
         return outs  # type: ignore[return-value]
 
     def _run_equal(self, token_lists: Sequence[Sequence[int]],
-                   frames: Optional[Sequence] = None
+                   frames: Optional[Sequence] = None,
+                   pad_to: Optional[int] = None
                    ) -> List[PrefillOutput]:
         cfg = self.cfg
         b = len(token_lists)
         lens = [len(t) for t in token_lists]
-        s = max(lens)
+        s = pad_to if pad_to is not None else max(lens)
+        assert s >= max(lens), (s, lens)
         toks = np.zeros((b, s), np.int32)
         for i, t in enumerate(token_lists):
             toks[i, :len(t)] = t
         batch = {"tokens": jnp.asarray(toks)}
-        self.compute_tokens += b * s
+        self.compute_tokens += sum(lens)
+        self.padded_tokens += b * s - sum(lens)
         if cfg.is_encoder_decoder:
             assert frames is not None, "enc-dec prefill needs frames"
             batch["frames"] = jnp.stack([jnp.asarray(f) for f in frames])
-        first, cache = forward_prefill(
-            cfg, self.params, batch,
-            last_index=jnp.asarray([ln - 1 for ln in lens]))
+        first, cache = self._prefill(
+            batch, last_index=jnp.asarray([ln - 1 for ln in lens]))
         outs: List[PrefillOutput] = []
         layers = cache["layers"]
         for i, ln in enumerate(lens):
@@ -180,7 +273,6 @@ class PrefillEngine:
             cross: Optional[Tree] = None
             if cfg.is_encoder_decoder:
                 cross = {}
-                from repro.models.params import block_period, num_blocks
                 for bk in range(num_blocks(cfg)):
                     for sb in range(block_period(cfg)):
                         c = layers[f"sub{sb}"]
@@ -197,15 +289,20 @@ class PrefillEngine:
         ``prefix_kv``: (attn_layers, plen, 2*kv_dim) — the cached prefix
         KVCache gathered from the paged pool (kernels.kv_gather), K and V
         packed along the last axis exactly as the pool stores them. Runs
-        the forward pass over only ``suffix_tokens`` with every attention
-        sublayer attending over prefix ++ suffix; returns a PrefillOutput
-        whose k/v cover the FULL prompt (prefix stitched back on) so the
-        transfer/decode path downstream is unchanged.
+        the forward pass over only ``suffix_tokens`` (right-padded to a
+        length bucket — pad rows are causally inert and sliced off) with
+        every attention sublayer attending over prefix ++ suffix;
+        returns a PrefillOutput whose k/v cover the FULL prompt (prefix
+        stitched back on) so the transfer/decode path downstream is
+        unchanged. Retraces scale with distinct (prefix_len, bucket)
+        pairs: the prefix KV length cannot be padded without masking the
+        reused keys, so only the suffix is bucketed.
         """
         cfg = self.cfg
         assert self.supports_prefix_reuse, cfg.name
         s = len(suffix_tokens)
         assert s >= 1, "prefix hit must leave at least one suffix token"
+        s_pad = self._bucket_len(s) if self.bucket_prefill else s
         plen = int(prefix_kv.shape[1])
         kvd = cfg.kv_dim
         k_pre, v_pre = prefix_kv[..., :kvd], prefix_kv[..., kvd:]
@@ -218,14 +315,16 @@ class PrefillEngine:
             vs = jnp.stack([v_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
             # (num_blocks, b=1, plen, kv_dim), scanned alongside params
             prefix[f"sub{sb}"] = {"k": ks[:, None], "v": vs[:, None]}
-        batch = {"tokens": jnp.asarray([list(suffix_tokens)], jnp.int32)}
+        toks = list(suffix_tokens) + [0] * (s_pad - s)
+        batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         if cfg.is_encoder_decoder:
             assert frames is not None, "enc-dec prefill needs frames"
             batch["frames"] = jnp.asarray(frames)[None]
-        first, cache = forward_prefill(
-            cfg, self.params, batch,
-            last_index=jnp.asarray([s - 1]), prefix=prefix, prefix_len=plen)
+        first, cache = self._prefill(
+            batch, last_index=jnp.asarray([s - 1]), prefix=prefix,
+            prefix_len=plen)
         self.compute_tokens += s
+        self.padded_tokens += s_pad - s
         self.reused_tokens += plen
         self.prefix_prefills += 1
         layers = cache["layers"]
@@ -250,43 +349,49 @@ class PrefillEngine:
 
 
 class DecodeEngine:
-    """Continuous-batched paged decode over a PagedKVPool."""
+    """Continuous-batched paged decode over a PagedKVPool.
+
+    Slot state lives in fixed-shape padded arrays over ``max_slots``
+    (tokens / positions / active mask / power-of-two bucketed block
+    table, plus block-stacked mamba and cross-attention buffers from
+    ``caches.decode_slot_state``), so the fused path runs the whole
+    iteration as one jitted device program with the pool storage and
+    slot buffers donated: one dispatch, one host transfer (the argmax),
+    zero per-layer pool copies. Retraces happen only when the block
+    table grows past its bucket (bounded by log2(pool blocks)).
+
+    ``fused=False`` (or env ``REPRO_DECODE=eager``) keeps the eager
+    per-layer loop: one dispatch per sublayer, a whole-pool copy per
+    attention layer, a host sync per step — the measured baseline in
+    benchmarks/bench_decode.py.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Tree, pool: PagedKVPool,
-                 *, max_slots: int = 8):
+                 *, max_slots: int = 8, fused: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.pool = pool
         self.max_slots = max_slots
+        if fused is None:
+            fused = os.environ.get("REPRO_DECODE", "fused") != "eager"
+        self.fused = bool(fused)
         self._attn_order = _attn_layer_order(cfg)
         self._mamba_order = _mamba_layer_order(cfg)
-        # slot state
+        # slot state: host mirrors (admission bookkeeping) ...
         self.rid = [None] * max_slots
         self.pos = np.zeros(max_slots, np.int64)      # tokens so far
         self.last_tok = np.zeros(max_slots, np.int32)
-        s_cfg = cfg.ssm
-        self._cross_slots: Dict[Tuple[int, int], Tuple] = {}
-        if cfg.is_encoder_decoder:
-            from repro.models.params import block_period, num_blocks
-            for bk in range(num_blocks(cfg)):
-                for sb in range(block_period(cfg)):
-                    self._cross_slots[(bk, sb)] = (
-                        jnp.zeros((max_slots, cfg.encoder_seq, cfg.kv_dim)),
-                        jnp.zeros((max_slots, cfg.encoder_seq, cfg.kv_dim)))
-        self._mamba_slots: Dict[Tuple[int, int], Tree] = {}
-        if self._mamba_order:
-            d_in = s_cfg.expand * cfg.d_model
-            gn = s_cfg.n_groups * s_cfg.d_state
-            nh = d_in // s_cfg.head_dim
-            kk = s_cfg.conv_kernel
-            for key in self._mamba_order:
-                self._mamba_slots[key] = {
-                    "conv_x": jnp.zeros((max_slots, d_in, kk - 1)),
-                    "conv_b": jnp.zeros((max_slots, gn, kk - 1)),
-                    "conv_c": jnp.zeros((max_slots, gn, kk - 1)),
-                    "state": jnp.zeros((max_slots, nh, s_cfg.d_state,
-                                        s_cfg.head_dim)),
-                }
+        # ... and fixed-shape device state for the fused step
+        self._slot_layers = decode_slot_state(cfg, max_slots)
+        self._tokens = jnp.zeros((max_slots,), jnp.int32)
+        self._pos = jnp.zeros((max_slots,), jnp.int32)
+        self._active = jnp.zeros((max_slots,), bool)
+        self._table_w = 1                             # pow2 table bucket
+        self._table = jnp.full((max_slots, 1), -1, jnp.int32)
+        self._caps = np.zeros(max_slots, np.int64)    # tokens allocatable
+        self._dirty = True        # host mirrors ahead of device arrays
+        self.fused_steps = 0
+        self.eager_steps = 0
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> List[int]:
@@ -298,7 +403,9 @@ class DecodeEngine:
     def admit(self, rid: int, out: PrefillOutput, blocks: Sequence[int],
               slot: Optional[int] = None) -> int:
         """Attach a transferred request to a free slot. The KV for its
-        prompt must already be in `self.pool` under `blocks`."""
+        prompt must already be in `self.pool` under `blocks`, and the
+        request's FULL block allocation (prompt + generation room) must
+        be in place — the fused step snapshots the block table here."""
         if slot is None:
             free = self.free_slots()
             if not free:
@@ -307,24 +414,90 @@ class DecodeEngine:
         self.rid[slot] = rid
         self.pos[slot] = out.prompt_len
         self.last_tok[slot] = out.first_token
-        for key, st in (out.mamba_state or {}).items():
-            buf = self._mamba_slots[key]
-            for k2 in buf:
-                buf[k2] = buf[k2].at[slot].set(st[k2].astype(buf[k2].dtype))
-        for key, (xk, xv) in (out.cross or {}).items():
-            bk_, bv_ = self._cross_slots[key]
-            self._cross_slots[key] = (
-                bk_.at[slot].set(xk.astype(bk_.dtype)),
-                bv_.at[slot].set(xv.astype(bv_.dtype)))
+        for (bk, sb), st in (out.mamba_state or {}).items():
+            buf = self._slot_layers[f"sub{sb}"]
+            for k2 in ("conv_x", "conv_b", "conv_c", "state"):
+                buf[k2] = buf[k2].at[bk, slot].set(
+                    st[k2].astype(buf[k2].dtype))
+        for (bk, sb), (xk, xv) in (out.cross or {}).items():
+            buf = self._slot_layers[f"sub{sb}"]
+            buf["xk"] = buf["xk"].at[bk, slot].set(xk.astype(buf["xk"].dtype))
+            buf["xv"] = buf["xv"].at[bk, slot].set(xv.astype(buf["xv"].dtype))
+        self._dirty = True
         return slot
 
     def evict(self, slot: int):
         self.rid[slot] = None
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        self._dirty = True
 
     # -------------------------------------------------------------- step
     def step(self) -> Dict[int, int]:
         """One decode iteration over all active slots.
         Returns {slot: next_token}."""
+        if self.fused:
+            return self._step_fused()
+        return self._step_eager()
+
+    def _sync_device(self):
+        """Push host slot mirrors into the fixed-shape device arrays.
+        Runs only after admissions/evictions (membership changes) — the
+        steady-state fused loop touches no host state on the way in."""
+        need = max((len(self.pool.owned(r)) for r in self.rid
+                    if r is not None), default=1)
+        while self._table_w < need:
+            self._table_w *= 2
+        self._tokens = jnp.asarray(self.last_tok)
+        self._pos = jnp.asarray(self.pos.astype(np.int32))
+        self._active = jnp.asarray(
+            np.asarray([r is not None for r in self.rid]))
+        self._table = jnp.asarray(
+            self.pool.block_tables(list(self.rid), self._table_w))
+        bs = self.pool.block_size
+        self._caps = np.asarray(
+            [len(self.pool.owned(r)) * bs if r is not None else 0
+             for r in self.rid], np.int64)
+        self._dirty = False
+
+    def _step_fused(self) -> Dict[int, int]:
+        act = self.active_slots()
+        if not act:
+            return {}
+        if self._dirty:
+            self._sync_device()
+        # the device scatter clamps indices, which would silently
+        # overwrite earlier KV on allocation overflow — fail loudly like
+        # the eager loop's Python indexing instead (caps snapshotted at
+        # sync: allocations are fixed from admit onward)
+        over = np.nonzero(self.pos >= self._caps)[0]
+        over = [s for s in over if self.rid[s] is not None]
+        if over:
+            s_i = over[0]
+            raise IndexError(
+                f"slot {s_i} (rid {self.rid[s_i]}): token position "
+                f"{int(self.pos[s_i])} outside its "
+                f"{int(self._caps[s_i])}-token block allocation")
+        nxt, toks, pos, storage, layers = decode_step_jit(
+            self.cfg, self.params, self.pool.storage, self._table,
+            self._tokens, self._pos, self._active, self._slot_layers,
+            block_size=self.pool.block_size)
+        self.pool.set_storage(storage)       # donated: updated in place
+        self._slot_layers = layers
+        self._tokens, self._pos = toks, pos
+        self.fused_steps += 1
+        out_np = np.asarray(nxt)             # the ONE host sync per step
+        out: Dict[int, int] = {}
+        for s_i in act:
+            self.pos[s_i] += 1
+            self.last_tok[s_i] = out_np[s_i]
+            out[s_i] = int(out_np[s_i])
+        return out
+
+    def _step_eager(self) -> Dict[int, int]:
+        """Legacy per-layer loop (benchmark baseline): every sublayer is
+        a separate dispatch and each attention layer swaps a full copy
+        of the paged pool."""
         cfg = self.cfg
         act = self.active_slots()
         if not act:
@@ -342,7 +515,6 @@ class DecodeEngine:
         bt = jnp.asarray(self.pool.block_tables(
             [self.rid[s] for s in act], nblocks))
         lens = pos + 1                                 # incl. current token
-
         for bk in range(num_blocks(cfg)):
             for sb in range(period):
                 p = _slice_layer(self.params["blocks"][f"sub{sb}"], bk)
@@ -364,29 +536,32 @@ class DecodeEngine:
                         offs.append(t % self.pool.block_size)
                     kv_tok = jnp.concatenate([kf, vf], -1).astype(
                         self.pool.dtype)
-                    st = self.pool.storage.at[
+                    self.pool.set_storage(self.pool.storage.at[
                         li, jnp.asarray(blk_ids), jnp.asarray(offs)
-                    ].set(kv_tok)
-                    self.pool.storage = st
+                    ].set(kv_tok))
                     o = ops.paged_attention(
                         q4.astype(self.pool.dtype),
                         self.pool.storage[li], bt,
                         lens.astype(jnp.int32))
                     h = h + _merge_heads(o).astype(h.dtype) @ p["wo"]
                 else:
-                    buf = self._mamba_slots[(bk, sb)]
-                    cin = {k2: v2[act_arr] for k2, v2 in buf.items()}
+                    buf = self._slot_layers[f"sub{sb}"]
+                    cin = {k2: buf[k2][bk, act_arr]
+                           for k2 in ("conv_x", "conv_b", "conv_c",
+                                      "state")}
                     h, nc = mamba_sublayer_step(p, h, cin, cfg)
-                    for k2 in buf:
-                        buf[k2] = buf[k2].at[act_arr].set(
-                            nc[k2].astype(buf[k2].dtype))
+                    for k2, v2 in nc.items():
+                        buf[k2] = buf[k2].at[bk, act_arr].set(
+                            v2.astype(buf[k2].dtype))
                 if cfg.is_encoder_decoder:
                     from repro.models.modeling import attention_decode
-                    xk, xv = self._cross_slots[(bk, sb)]
+                    buf = self._slot_layers[f"sub{sb}"]
+                    xk = buf["xk"][bk, act_arr]
+                    xv = buf["xv"][bk, act_arr]
                     x = rmsnorm(h, p["norm_x"], cfg.norm_eps)
                     q4 = _split_heads(x @ p["wqx"], cfg.num_heads)
                     o = attention_decode(
-                        q4.astype(jnp.float32), xk[act_arr], xv[act_arr],
+                        q4.astype(jnp.float32), xk, xv,
                         cfg.num_kv_heads,
                         jnp.asarray(cfg.encoder_seq), window=None)
                     h = h + _merge_heads(o).astype(h.dtype) @ p["wox"]
@@ -395,6 +570,8 @@ class DecodeEngine:
         h = rmsnorm(h, self.params["final_norm"], cfg.norm_eps)
         logits = lm_logits(cfg, self.params, h)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.eager_steps += 1
+        self._dirty = True       # device token/pos mirrors are now stale
         out: Dict[int, int] = {}
         for j, s_i in enumerate(act):
             self.pos[s_i] += 1

@@ -337,22 +337,37 @@ class ServeGroup:
             else 0.0
         return agg
 
+    def recent_admission_waits(self, n: int = 64) -> List[float]:
+        """Tail of per-request admission waits (overlapped: scheduler
+        ledger; blocking: in-tick D2D stalls) — the RatioAdjuster's
+        decode-pressure signal."""
+        if self.sched is not None:
+            return list(self.sched.admission_waits[-n:])
+        return list(self.blocking_waits[-n:])
+
     def transfer_stats(self) -> Dict[str, float]:
         """Per-group D2D pipeline stats: overlapped mode reports the
         scheduler's virtual-time ledger, blocking mode the synchronous
-        stalls paid inside the tick's critical section."""
+        stalls paid inside the tick's critical section. Both carry the
+        group's MEASURED engine wall times (the same numbers the vclock
+        charges), so the overlap pipeline's ready/busy arithmetic tracks
+        the fused engines' real speed rather than a profiled guess."""
         if self.sched is not None:
             out = dict(self.sched.stats())
             out["overlapped"] = 1.0
-            return out
-        w = self.blocking_waits
-        return {
-            "overlapped": 0.0,
-            "jobs_admitted": float(self.n_blocking_admits),
-            "retries": 0.0, "requeues": 0.0,
-            "admission_wait_mean_s": _mean(w),
-            "link_busy_s": sum(w),
-        }
+        else:
+            w = self.blocking_waits
+            out = {
+                "overlapped": 0.0,
+                "jobs_admitted": float(self.n_blocking_admits),
+                "retries": 0.0, "requeues": 0.0,
+                "admission_wait_mean_s": _mean(w),
+                "link_busy_s": sum(w),
+            }
+        # medians: first samples per shape carry one-time JIT compile cost
+        out["decode_step_median_s"] = _median(self.decode_step_s[-32:])
+        out["prefill_batch_median_s"] = _median(self.prefill_batch_s[-32:])
+        return out
 
     def stats(self) -> Dict[str, float]:
         n_p, n_d = self.ratio
@@ -382,17 +397,60 @@ class RatioAdjuster:
     gateway backlog + busy prefills + an idle decode means the prefill
     side is the bottleneck, and vice versa. A flip fires only after two
     consecutive adjust ticks agree on the direction (hysteresis: noisy
-    observed timings near the optimum must not ping-pong a node)."""
+    observed timings near the optimum must not ping-pong a node).
+
+    The per-group transfer pipeline's ADMISSION-WAIT ledger
+    (ServeGroup.recent_admission_waits) weighs in alongside Eq.1 and the
+    queue/TTFT pressure: prefilled KV waiting on a decode slot is decode
+    starvation the TTFT-side signals cannot see, so a spike (recent
+    waits >= wait_spike x the earlier window) votes P->D. An
+    agreeing-or-unopposed vote shifts the suggestion; a vote that
+    contradicts Eq.1 cancels the tick, and after a wait-driven flip the
+    opposite (D->P) correction is suppressed for ``wait_cooldown``
+    adjust intervals — the relieved spike would otherwise expire
+    immediately and Eq.1 would revert the flip every cycle, paying two
+    node drains per round trip (conflicting evidence must not
+    ping-pong nodes)."""
 
     def __init__(self, group: ServeGroup, *, interval: int = 8,
                  min_each: int = 1,
-                 profile: Optional[InstanceProfile] = None):
+                 profile: Optional[InstanceProfile] = None,
+                 wait_spike: float = 2.0, wait_min_s: float = 1e-5,
+                 wait_cooldown: int = 4):
         self.group = group
         self.interval = max(1, interval)
         self.min_each = min_each
         self.profile = profile
+        self.wait_spike = wait_spike
+        self.wait_min_s = wait_min_s
+        self.wait_cooldown = wait_cooldown
         self.decisions: List[Tuple[int, str]] = []
+        self.wait_votes: List[int] = []    # ticks the wait signal fired
         self._last_want: Optional[str] = None
+        self._wait_count = 0               # admissions seen at last eval
+        self._wait_flip_tick: Optional[int] = None
+
+    def _admission_wait_signal(self) -> Optional[str]:
+        """P->D when the tail of admission waits spikes over the earlier
+        window: segments are landing faster than decode frees slots.
+        Only FRESH samples can vote — without new admissions since the
+        last adjust tick the signal expires, so one historical burst
+        cannot keep voting (or keep vetoing the corrective flip) on a
+        quiet group."""
+        g = self.group
+        count = int(g.sched.n_admitted if g.sched is not None
+                    else g.n_blocking_admits)
+        fresh = count - self._wait_count
+        self._wait_count = count
+        if fresh <= 0:
+            return None
+        w = g.recent_admission_waits(64)
+        if len(w) < 8:
+            return None
+        recent, base = _mean(w[-4:]), _mean(w[:-4])
+        if recent >= self.wait_spike * max(base, self.wait_min_s):
+            return "P->D"
+        return None
 
     def maybe_adjust(self, tick_no: int, backlog: int = 0) -> Optional[str]:
         """`backlog`: gateway-queued requests homed to this group."""
@@ -405,20 +463,31 @@ class RatioAdjuster:
         total = n_p + n_d
         if total < 2 * self.min_each + 1:
             return None   # nothing to flip without violating min_each
+        wait_want = self._admission_wait_signal()
+        if wait_want is not None:
+            self.wait_votes.append(tick_no)
         prof = self.profile or g.observed_profile()
         if prof is not None:
-            # profile is authoritative: at the Eq.1 optimum, do nothing
-            # (falling through to pressure here would oscillate)
+            # profile leads: at the Eq.1 optimum, only the admission-wait
+            # vote (decode starvation Eq.1's medians lag behind) can
+            # shift the suggestion; plain pressure fall-through here
+            # would oscillate
             t_p, _ = optimal_ratio(prof, total, min_each=self.min_each)
             if t_p > n_p:
                 want = "D->P"
             elif t_p < n_p:
                 want = "P->D"
             else:
-                self._last_want = None    # contradicts any armed signal
-                return None
+                want = wait_want
         else:
-            want = self._pressure_signal(backlog)
+            want = self._pressure_signal(backlog) or wait_want
+        wait_driven = want is not None and want == wait_want
+        if want is not None and wait_want is not None and want != wait_want:
+            want = None                   # conflicting evidence: stand down
+        if (want == "D->P" and self._wait_flip_tick is not None
+                and tick_no - self._wait_flip_tick
+                < self.wait_cooldown * self.interval):
+            want = None   # let the wait-driven extra decode prove itself
         if want is None:
             self._last_want = None
             return None
@@ -429,6 +498,8 @@ class RatioAdjuster:
         if g.request_flip("D" if want == "D->P" else "P",
                           min_each=self.min_each) is None:
             return None
+        if wait_driven:
+            self._wait_flip_tick = tick_no
         self.decisions.append((tick_no, want))
         return want
 

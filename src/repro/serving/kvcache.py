@@ -83,6 +83,16 @@ class PagedKVPool:
         self.hit_tokens = 0
         self.evictions = 0
         self.cow_copies = 0
+        self.storage_writes = 0      # engine-issued storage swaps
+
+    def set_storage(self, storage: jax.Array):
+        """Adopt a new storage buffer (the decode engines route their
+        per-step pool updates through here: the eager loop swaps once
+        per attention layer per step, the fused jitted step exactly once
+        per step with the old buffer donated — the aliasing test pins
+        that contract on ``storage_writes``)."""
+        self.storage = storage
+        self.storage_writes += 1
 
     # ------------------------------------------------------------- alloc
     @property

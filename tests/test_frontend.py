@@ -124,6 +124,82 @@ def test_adjuster_never_violates_min_each():
     assert fe.groups["default"].ratio == (1, 1)   # nothing to give up
 
 
+def test_adjuster_admission_wait_spike_shifts_ratio():
+    """Prefilled KV queueing for decode slots (the transfer pipeline's
+    admission-wait ledger) is decode starvation the queue/TTFT pressure
+    cannot see: a spike must arm and then fire a P->D flip."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (2, 1)}, params=params,
+                         adjust_ratio=True)
+    g = fe.groups["default"]
+    adj = fe.adjusters["default"]
+    # flat wait history: no vote, no flip
+    g.sched.admission_waits = [1e-6] * 16
+    g.sched.n_admitted = 16
+    assert adj.maybe_adjust(8) is None
+    assert adj.maybe_adjust(16) is None
+    assert not adj.wait_votes and not g.draining_nodes()
+    # recent waits spike an order of magnitude over the earlier window
+    g.sched.admission_waits = [1e-6] * 12 + [1e-3] * 4
+    g.sched.n_admitted = 20
+    assert adj.maybe_adjust(24) is None          # armed (hysteresis)
+    g.sched.admission_waits += [1e-3] * 2        # spike persists
+    g.sched.n_admitted = 22
+    assert adj.maybe_adjust(32) == "P->D"        # confirmed -> flip
+    assert adj.wait_votes == [24, 32]
+    assert g.draining_nodes()                    # a prefill is draining
+    assert adj.decisions[-1][1] == "P->D"
+
+
+def test_adjuster_wait_vote_expires_without_fresh_samples():
+    """A historical burst must not keep voting on a quiet group: with no
+    new admissions since the last adjust tick the signal expires."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (2, 1)}, params=params,
+                         adjust_ratio=True)
+    g = fe.groups["default"]
+    adj = fe.adjusters["default"]
+    g.sched.admission_waits = [1e-6] * 12 + [1e-3] * 4
+    g.sched.n_admitted = 16
+    assert adj.maybe_adjust(8) is None           # armed on fresh spike
+    assert adj.wait_votes == [8]
+    # traffic goes quiet: same ledger, no new admissions -> vote gone
+    assert adj.maybe_adjust(16) is None
+    assert adj.maybe_adjust(24) is None
+    assert adj.wait_votes == [8]
+    assert not g.draining_nodes()
+
+
+def test_adjuster_wait_flip_not_immediately_reverted():
+    """At the Eq.1 optimum a wait-driven P->D flip relieves the spike;
+    Eq.1 then wants the node back. The cooldown must hold the revert
+    (two drains per round trip would oscillate forever), then allow it
+    once the extra decode has had time to prove itself."""
+    cfg, params = reduced_params("granite-3-8b")
+    prof = InstanceProfile(ttft_bs=0.2, b_p=4, r_pre=1.0, tpot_bs=0.01,
+                           b_d=8, gen_tokens=20.0, xi=0.0)
+    assert optimal_ratio(prof, 3) == (2, 1)      # deployed == optimum
+    fe = ClusterFrontend(cfg, topology={"default": (2, 1)}, params=params,
+                         adjust_ratio=True, profiles={"default": prof})
+    g = fe.groups["default"]
+    adj = fe.adjusters["default"]
+    g.sched.admission_waits = [1e-6] * 12 + [1e-3] * 4
+    g.sched.n_admitted = 16
+    assert adj.maybe_adjust(8) is None           # Eq.1 tie; spike arms
+    g.sched.admission_waits += [1e-3] * 2
+    g.sched.n_admitted = 18
+    assert adj.maybe_adjust(16) == "P->D"        # wait-driven flip
+    g.tick(17)                                   # idle node drain completes
+    assert g.ratio == (1, 2)
+    # Eq.1 now wants D->P, but the cooldown (4 intervals) holds it
+    for t in (24, 32, 40):
+        assert adj.maybe_adjust(t) is None
+        assert g.ratio == (1, 2)
+    # cooldown over: the correction may arm and fire again
+    assert adj.maybe_adjust(48) is None          # arms
+    assert adj.maybe_adjust(56) == "D->P"
+
+
 def test_multi_group_outputs_match_single_group_baseline():
     """Acceptance: streamed outputs from >= 2 concurrent scenario groups
     are identical to the single-group MiniCluster baseline for a fixed
