@@ -1,0 +1,140 @@
+"""Universal bucketed prefill: compile-stall + wall-time measurement.
+
+Ragged tidal traffic against the exact-length path compiles one prefill
+program per distinct (batch, length) shape; the bucketed path (now
+serving EVERY family — SSM/hybrid and capacity MoE included, PR 5)
+compiles O(num_buckets) and pays pad FLOPs instead. This section
+measures both, per family, plus the warm prefix-reuse path where the
+prefix KV length is bucketed too (traced q_offset), and emits
+``BENCH_prefill.json`` so the compile-count trajectory is tracked
+across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+
+# dense baseline + the three families PR 4's gates kept on the
+# exact-length path (capacity MoE / SSM / hybrid)
+ARCHS = ["granite-3-8b", "qwen2-moe-a2.7b", "mamba2-2.7b",
+         "jamba-1.5-large-398b"]
+BATCH = 4
+WAVES = 3
+OUT_JSON = os.environ.get("BENCH_PREFILL_JSON", "BENCH_prefill.json")
+
+
+def _workload(cfg, rng, n=BATCH * WAVES):
+    lens = rng.integers(5, 14, n)
+    return [list(map(int, rng.integers(0, cfg.vocab_size, int(ln))))
+            for ln in lens]
+
+
+def _run_waves(engine, prompts) -> List[float]:
+    """Run the workload in BATCH-sized waves; per-wave wall seconds."""
+    walls = []
+    for i in range(0, len(prompts), BATCH):
+        t0 = time.perf_counter()
+        engine.run(prompts[i:i + BATCH])
+        walls.append(time.perf_counter() - t0)
+    return walls
+
+
+def _phase(cfg, params, prompts, *, bucket):
+    from repro.serving.engine import PrefillEngine, prefill_compile_count
+    eng = PrefillEngine(cfg, params, bucket_prefill=bucket)
+    c0 = prefill_compile_count()
+    cold_walls = _run_waves(eng, prompts)      # includes compile stalls
+    compiles = prefill_compile_count() - c0
+    warm_walls = _run_waves(eng, prompts)      # steady state: shapes seen
+    return {
+        "compiles": compiles,
+        "cold_total_s": sum(cold_walls),
+        "steady_batch_median_s": float(np.median(warm_walls)),
+        "pad_waste": eng.padded_tokens
+        / max(eng.compute_tokens + eng.padded_tokens, 1),
+    }
+
+
+def _warm_phase(cfg, params, rng, *, bucket):
+    """Warm prefix-reuse: suffix-only prefills across DISTINCT prefix
+    lengths — exact mode retraces per prefix length, bucketed mode per
+    (prefix bucket, suffix bucket) pair."""
+    import jax.numpy as jnp
+
+    from repro.serving.engine import PrefillEngine, prefill_compile_count
+    eng = PrefillEngine(cfg, params, bucket_prefill=bucket)
+    align = eng.prefix_align
+    long = _workload(cfg, rng, 1)[0] + list(
+        map(int, rng.integers(0, cfg.vocab_size, 60)))
+    cold, = eng.run([long])
+    plens = [16, 17, 20, 25, 28, 31] if align == 1 \
+        else [align, 2 * align, 3 * align]
+    c0 = prefill_compile_count()
+    walls = []
+    for plen in plens:
+        pkv = jnp.concatenate([cold.k[:, :plen], cold.v[:, :plen]],
+                              axis=-1)
+        t0 = time.perf_counter()
+        eng.run_suffix(long[plen:plen + 5], pkv)
+        walls.append(time.perf_counter() - t0)
+    return {
+        "admissions": len(plens),
+        "compiles": prefill_compile_count() - c0,
+        "total_s": sum(walls),
+        "batch_median_s": float(np.median(walls)),
+    }
+
+
+def run() -> list:
+    import jax
+
+    from repro.models.params import init_params
+
+    rows: list[Row] = []
+    report = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(6)
+        prompts = _workload(cfg, rng)
+        exact = _phase(cfg, params, prompts, bucket=False)
+        bucketed = _phase(cfg, params, prompts, bucket=True)
+        short = arch.split("-")[0]
+        rows += [
+            (f"prefill/{short}_exact_compiles", exact["compiles"],
+             f"cold_total_s={exact['cold_total_s']:.2f}"),
+            (f"prefill/{short}_bucketed_compiles", bucketed["compiles"],
+             f"cold_total_s={bucketed['cold_total_s']:.2f}"),
+            (f"prefill/{short}_bucketed_batch_us",
+             bucketed["steady_batch_median_s"] * 1e6,
+             f"exact={exact['steady_batch_median_s'] * 1e6:.0f}us,"
+             f"pad_waste={bucketed['pad_waste']:.2f}"),
+        ]
+        report[arch] = {"exact": exact, "bucketed": bucketed}
+        eng_probe = None
+        try:
+            from repro.serving.engine import PrefillEngine
+            eng_probe = PrefillEngine(cfg, params)
+        except Exception:
+            pass
+        if eng_probe is not None and eng_probe.supports_prefix_reuse:
+            w_ex = _warm_phase(cfg, params, np.random.default_rng(7),
+                               bucket=False)
+            w_bu = _warm_phase(cfg, params, np.random.default_rng(7),
+                               bucket=True)
+            rows.append((f"prefill/{short}_warm_compiles",
+                         w_bu["compiles"],
+                         f"exact={w_ex['compiles']},"
+                         f"admissions={w_bu['admissions']}"))
+            report[arch]["warm_prefix"] = {"exact": w_ex,
+                                           "bucketed": w_bu}
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return rows

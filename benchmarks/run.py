@@ -6,8 +6,8 @@ import argparse
 import sys
 
 from benchmarks import (bench_decode, bench_e2e, bench_forwarding,
-                        bench_kernels, bench_pd_ratio, bench_prefix_cache,
-                        bench_recovery, bench_transfer)
+                        bench_kernels, bench_pd_ratio, bench_prefill,
+                        bench_prefix_cache, bench_recovery, bench_transfer)
 from benchmarks.common import emit
 
 ALL = {
@@ -17,6 +17,7 @@ ALL = {
     "prefix": bench_prefix_cache,     # Fig 1b, 3a
     "e2e": bench_e2e,                 # 6.7x / 60% headline
     "decode": bench_decode,           # fused vs eager decode step
+    "prefill": bench_prefill,         # exact vs bucketed prefill compiles
     "recovery": bench_recovery,       # Fig 13b/c/d
     "kernels": bench_kernels,         # kernel microbench
 }

@@ -20,7 +20,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             q_tile: int, kv_tile: int, kv_tiles: int, scale: float,
-            q_offset: int):
+            q_offset: int, prefix_pad: int, q_valid: int):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -30,30 +30,47 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # skip fully-masked kv tiles: the tile's first key position must not
-    # exceed the tile's last (offset) query position (causal)
-    @pl.when(kj * kv_tile <= q_offset + (qi + 1) * q_tile - 1)
+    # skip fully-masked kv tiles: a tile does work iff it holds a REAL
+    # prefix key (row < q_offset) or a suffix key whose first relative
+    # index does not exceed the tile's last (suffix-relative) query row
+    ts = kj * kv_tile
+    last_q = (qi + 1) * q_tile - 1
+
+    @pl.when((ts < q_offset)
+             | ((ts + kv_tile > prefix_pad)
+                & (jnp.maximum(ts, prefix_pad) - prefix_pad <= last_q)))
     def _work():
         q = q_ref[0].astype(jnp.float32)          # (q_tile, hd)
         k = k_ref[0].astype(jnp.float32)          # (kv_tile, hd)
         v = v_ref[0].astype(jnp.float32)
         s = jnp.dot(q, k.T) * scale               # (q_tile, kv_tile)
-        qpos = q_offset + qi * q_tile + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 0)
-        kpos = kj * kv_tile + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 1)
-        s = jnp.where(kpos <= qpos, s, -1e30)
+        qrel = qi * q_tile + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)                # suffix-relative q row
+        qpos = q_offset + qrel
+        kr = ts + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)                # key ROW index
+        # prefix region rows sit at their own position and are real only
+        # below q_offset; suffix rows continue at q_offset (when
+        # prefix_pad == q_offset this reduces to kpos == kr, all valid)
+        is_pfx = kr < prefix_pad
+        kpos = jnp.where(is_pfx, kr, q_offset + (kr - prefix_pad))
+        mask = (~is_pfx | (kr < q_offset)) & (kpos <= qpos)
+        if q_valid:
+            mask &= qrel < q_valid
+        s = jnp.where(mask, s, -1e30)
         m_prev = m_ref[...]
         m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         alpha = jnp.exp(m_prev - m_cur)
         p = jnp.exp(s - m_cur[:, None])
-        p = jnp.where(kpos <= qpos, p, 0.0)
+        p = jnp.where(mask, p, 0.0)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
         m_ref[...] = m_cur
 
     @pl.when(kj == kv_tiles - 1)
     def _finish():
+        # fully-masked (padded) query rows have l == 0: the clamp makes
+        # their output exactly 0 — padded queries attend to nothing
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
@@ -61,19 +78,27 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          q_tile: int = 128, kv_tile: int = 128,
                          interpret: bool = True,
-                         q_offset: int = 0) -> jax.Array:
-    """Causal attention. q: (bh, s, hd); k/v: (bh, q_offset + s, hd) with
-    heads flattened into the leading dim (GQA expansion happens in the
-    wrapper). Returns (bh, s, hd).
+                         q_offset: int = 0, prefix_pad: int = 0,
+                         q_valid: int = 0) -> jax.Array:
+    """Causal attention. q: (bh, s, hd); k/v: (bh, P + s, hd) with heads
+    flattened into the leading dim (GQA expansion happens in the
+    wrapper) and P = prefix_pad (or q_offset when prefix_pad == 0).
+    Returns (bh, s, hd).
 
     q_offset > 0 = chunked/suffix prefill against a reused prefix
-    KVCache: the queries are the last s positions of the kv sequence,
-    kv tiles left of the causal frontier still stream through the same
-    online-softmax state.
+    KVCache: the queries sit at absolute positions q_offset.. of the kv
+    sequence; kv tiles left of the causal frontier still stream through
+    the same online-softmax state. With prefix_pad > 0 the prefix
+    region is right-padded to a static bucket and only its first
+    q_offset keys are real (padded prefix keys masked from every
+    softmax). q_valid > 0 = only the first q_valid query rows are real;
+    padded queries attend to nothing and output exactly 0.
     """
     bh, s, hd = q.shape
     sk = k.shape[1]
-    assert sk == q_offset + s, (sk, q_offset, s)
+    p_pad = prefix_pad if prefix_pad else q_offset
+    assert p_pad >= q_offset, (prefix_pad, q_offset)
+    assert sk == p_pad + s, (sk, p_pad, s)
     assert s % q_tile == 0 and sk % kv_tile == 0, (s, sk, q_tile, kv_tile)
     q_tiles = s // q_tile
     kv_tiles = sk // kv_tile
@@ -96,7 +121,8 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     )
     kern = functools.partial(_kernel, q_tile=q_tile, kv_tile=kv_tile,
                              kv_tiles=kv_tiles, scale=scale,
-                             q_offset=q_offset)
+                             q_offset=q_offset, prefix_pad=p_pad,
+                             q_valid=q_valid)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,

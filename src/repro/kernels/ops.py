@@ -106,14 +106,21 @@ def paged_attention(q: jax.Array, kv_pages: jax.Array,
 
 
 _flash_prefill_ref = jax.jit(ref.flash_prefill,
-                             static_argnames=("q_offset",))
+                             static_argnames=("q_offset", "prefix_pad",
+                                              "q_valid"))
 
 
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
-                  q_offset: int = 0) -> jax.Array:
+                  q_offset: int = 0, prefix_pad: int = 0,
+                  q_valid: int = 0) -> jax.Array:
     """q_offset > 0: suffix-only (chunked) prefill against a reused
-    prefix KVCache — k/v cover q_offset + s positions."""
+    prefix KVCache — k/v cover prefix_pad + s positions (prefix_pad
+    defaults to q_offset; larger = a right-padded prefix bucket whose
+    padded keys are masked). q_valid > 0: only the first q_valid query
+    rows are real; padded queries attend to nothing (output 0)."""
     if _use_ref():
-        return _flash_prefill_ref(q, k, v, q_offset=q_offset)
+        return _flash_prefill_ref(q, k, v, q_offset=q_offset,
+                                  prefix_pad=prefix_pad, q_valid=q_valid)
     return flash_prefill_pallas(q, k, v, interpret=_interpret(),
-                                q_offset=q_offset)
+                                q_offset=q_offset, prefix_pad=prefix_pad,
+                                q_valid=q_valid)

@@ -55,19 +55,39 @@ def paged_attention(q: jax.Array, kv_pages: jax.Array,
 
 
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
-                  q_offset: int = 0) -> jax.Array:
-    """Causal attention oracle. q: (bh, s, hd); k/v: (bh, q_offset+s, hd).
+                  q_offset: int = 0, prefix_pad: int = 0,
+                  q_valid: int = 0) -> jax.Array:
+    """Causal attention oracle. q: (bh, s, hd); k/v: (bh, P + s, hd)
+    where P = prefix_pad (or q_offset when prefix_pad == 0).
 
-    q_offset > 0 = chunked/suffix prefill: the queries are the LAST s
-    positions of the kv sequence (prefix-KV reuse)."""
+    q_offset > 0 = chunked/suffix prefill: the queries sit at absolute
+    positions q_offset..q_offset+s-1 of the kv sequence (prefix-KV
+    reuse). With ``prefix_pad`` > 0 the leading prefix region of k/v is
+    right-padded to prefix_pad rows of which only the first q_offset are
+    real — padded prefix keys are masked out of every softmax (bucketed
+    q_offset: one program per prefix bucket). ``q_valid`` > 0 marks how
+    many leading query rows are real: padded queries attend to nothing
+    and output exactly 0 (the valid-length mask that keeps bucket pads
+    from ever producing attention mass)."""
     bh, s, hd = q.shape
     sk = k.shape[1]
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bqd,bkd->bqk", q, k,
                         preferred_element_type=jnp.float32) * scale
     qpos = q_offset + jnp.arange(s)
-    kpos = jnp.arange(sk)
-    mask = kpos[None, :] <= qpos[:, None]
+    kj = jnp.arange(sk)
+    if prefix_pad:
+        is_pfx = kj < prefix_pad
+        kpos = jnp.where(is_pfx, kj, q_offset + (kj - prefix_pad))
+        kvalid = ~is_pfx | (kj < q_offset)
+        mask = kvalid[None, :] & (kpos[None, :] <= qpos[:, None])
+    else:
+        mask = kj[None, :] <= qpos[:, None]
+    if q_valid:
+        mask = mask & (jnp.arange(s) < q_valid)[:, None]
     scores = jnp.where(mask[None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked (padded) query rows: exactly zero output, matching
+    # the kernel's zero accumulator, not softmax's uniform fallback
+    probs = probs * mask[None].astype(probs.dtype)
     return jnp.einsum("bqk,bkd->bqd", probs.astype(v.dtype), v)

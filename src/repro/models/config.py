@@ -26,6 +26,15 @@ class MoEConfig:
     d_ff_expert: int = 0        # per-expert ffn hidden dim (routed and shared)
     capacity_factor: float = 1.25
     router_aux_coef: float = 0.01
+    # capacity accounting window (tokens): expert slots are counted
+    # inside fixed windows of this many consecutive tokens per row,
+    # aligned to the row start. Window-local counting is what makes
+    # capacity dispatch right-pad-invariant (pads route to a null slot
+    # and the slot threshold comes from the window's VALID token count)
+    # and prefix-transparent (a suffix-only prefill whose prefix length
+    # is a multiple of the window sees exactly the windows a full
+    # prefill would give its suffix tokens).
+    capacity_window: int = 16
     # which layers are MoE: "all" | "every_other" | "none"
     layout: str = "all"
     # dispatch algorithm: "capacity" (GShard-style scatter, may drop) or

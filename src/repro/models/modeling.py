@@ -78,15 +78,31 @@ def _merge_heads(x: jax.Array) -> jax.Array:
 
 def attention_seq(q: jax.Array, k: jax.Array, v: jax.Array, nkv: int, *,
                   causal: bool, window: Optional[int] = None,
-                  q_chunk: int = 0, q_offset: int = 0) -> jax.Array:
+                  q_chunk: int = 0, q_offset=0,
+                  prefix_pad: Optional[int] = None,
+                  q_valid: Optional[jax.Array] = None) -> jax.Array:
     """Full-sequence attention, chunked over query blocks.
 
     q: (b, s, nq, hd); k, v: (b, sk, nkv, hd). Returns (b, s, nq, hd).
 
     ``q_offset`` is the absolute position of the first query row
     (chunked-prefill / prefix-reuse: queries are the suffix of a longer
-    KV sequence, sk == q_offset + s). The Pallas lowering of the same
-    contract is ``kernels.flash_prefill(..., q_offset=...)``.
+    KV sequence). It may be a TRACED scalar when ``prefix_pad`` is set:
+    ``prefix_pad`` declares that the first ``prefix_pad`` key rows are a
+    reused-prefix region padded to a static bucket, of which only the
+    first ``q_offset`` are real — padded prefix keys are masked out of
+    every query's softmax, so warm prefix-reuse admissions share one
+    compiled program per (prefix bucket, suffix bucket) instead of
+    retracing per prefix length. Without ``prefix_pad``,
+    sk == q_offset + s and every key row is real (legacy contract).
+
+    ``q_valid`` (b,) marks how many leading query rows per batch row are
+    real: padded queries attend to nothing (their probability rows are
+    zeroed, output exactly 0), so right-pad bucketing can never write
+    attention mass — or NaNs — into rows the engine later slices off.
+    The Pallas lowering of the same contract is
+    ``kernels.flash_prefill(..., q_offset=..., prefix_pad=...,
+    q_valid=...)``.
 
     KV heads are expanded to the full query-head count: the (nkv, g)
     factorization of GQA is usually NOT shardable on the `model` axis
@@ -108,32 +124,48 @@ def attention_seq(q: jax.Array, k: jax.Array, v: jax.Array, nkv: int, *,
     q = constrain(q, ("batch", None, "q_heads_act", None))
     k = constrain(k, ("batch", None, "q_heads_act", None))
     v = constrain(v, ("batch", None, "q_heads_act", None))
-    kpos = jnp.arange(sk)
+    kj = jnp.arange(sk)
+    if prefix_pad is None:
+        kpos, kvalid = kj, None
+    else:
+        # key row -> absolute position / validity: prefix slots sit at
+        # their own index (real iff < q_offset), suffix slots continue
+        # at q_offset
+        is_pfx = kj < prefix_pad
+        kpos = jnp.where(is_pfx, kj, q_offset + (kj - prefix_pad))
+        kvalid = ~is_pfx | (kj < q_offset)
 
-    def one_chunk(qi: jax.Array, q0) -> jax.Array:
-        # qi: (b, c, nq, hd); q0: first absolute query position
+    def one_chunk(qi: jax.Array, c0: int) -> jax.Array:
+        # qi: (b, c, nq, hd); c0: first query row's index within s
         c = qi.shape[1]
         scores = jnp.einsum("bqhd,bshd->bhqs", qi, k,
                             preferred_element_type=jnp.float32) * scale
         scores = constrain(scores, ("batch", "q_heads_act", None, None))
+        qrel = c0 + jnp.arange(c)
         if causal:
-            qpos = q0 + jnp.arange(c)
+            qpos = q_offset + qrel
             m = kpos[None, :] <= qpos[:, None]
+            if kvalid is not None:
+                m &= kvalid[None, :]
             if window is not None:
                 m &= (qpos[:, None] - kpos[None, :]) < window
             scores = jnp.where(m[None, None], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
+        if q_valid is not None:
+            # padded query rows attend to nothing: output exactly 0
+            qm = qrel[None, :] < q_valid[:, None]           # (b, c)
+            probs = probs * qm[:, None, :, None].astype(probs.dtype)
         return jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
 
     if s <= q_chunk or s % q_chunk != 0:
-        return one_chunk(q, q_offset)
+        return one_chunk(q, 0)
     nc = s // q_chunk
     qcs = jnp.moveaxis(q.reshape(b, nc, q_chunk, nq, hd), 1, 0)
 
     @jax.checkpoint
     def body(_, inp):
         i, qi = inp
-        return None, one_chunk(qi, q_offset + i * q_chunk)
+        return None, one_chunk(qi, i * q_chunk)
 
     _, outs = lax.scan(body, None, (jnp.arange(nc), qcs))
     return jnp.moveaxis(outs, 0, 1).reshape(b, s, nq, hd)
@@ -204,11 +236,17 @@ def attn_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
                       causal: bool, positions: jax.Array,
                       window: Optional[int], use_rope: bool = True,
                       return_kv: bool = False,
-                      prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None):
-    """``prefix_kv`` = (k, v) each (b, plen, kv_dim), already roped at
-    absolute positions 0..plen-1 (a reused prefix KVCache): attention
-    runs over prefix ++ fresh keys with the queries offset by plen.
-    ``return_kv`` yields only the freshly computed (suffix) k/v."""
+                      prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                      prefix_len=None,
+                      q_valid: Optional[jax.Array] = None):
+    """``prefix_kv`` = (k, v) each (b, P, kv_dim), a reused prefix
+    KVCache already roped at its absolute positions and right-padded to
+    the static prefix bucket P; ``prefix_len`` (traced scalar, defaults
+    to P) is the real prefix length — padded prefix keys are masked out
+    of attention, so queries run at absolute offset ``prefix_len`` over
+    prefix ++ fresh keys. ``q_valid`` (b,) masks right-pad bucket
+    queries (they attend to nothing). ``return_kv`` yields only the
+    freshly computed (suffix) k/v."""
     x = rmsnorm(h, p["norm"], cfg.norm_eps)
     q, k, v = _attn_proj_qkv(p, x, cfg)
     q = _split_heads(q, cfg.num_heads)
@@ -217,16 +255,18 @@ def attn_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     v4 = _split_heads(v, cfg.num_kv_heads)
-    k_all, v_all, q_off = k, v4, 0
+    k_all, v_all, q_off, p_pad = k, v4, 0, None
     if prefix_kv is not None:
         kp, vp = prefix_kv
-        q_off = kp.shape[1]
+        p_pad = kp.shape[1]
+        q_off = p_pad if prefix_len is None else prefix_len
         k_all = jnp.concatenate(
             [_split_heads(kp.astype(k.dtype), cfg.num_kv_heads), k], axis=1)
         v_all = jnp.concatenate(
             [_split_heads(vp.astype(v4.dtype), cfg.num_kv_heads), v4], axis=1)
     o = attention_seq(q, k_all, v_all, cfg.num_kv_heads, causal=causal,
-                      window=window, q_offset=q_off)
+                      window=window, q_offset=q_off, prefix_pad=p_pad,
+                      q_valid=q_valid)
     h = h + _merge_heads(o) @ p["wo"]
     if return_kv:
         return h, (_merge_heads(k), v)
@@ -255,7 +295,8 @@ def mlp(p: Tree, x: jax.Array) -> jax.Array:
 MOE_TOKEN_CHUNK = 32768
 
 
-def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1
+def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1,
+            valid: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, jax.Array]:
     """Capacity-based top-k MoE with scatter dispatch, chunked over tokens.
 
@@ -269,6 +310,12 @@ def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1
     so a request's outputs never depend on what it happens to be batched
     with (batch-invariance — the engine-vs-oracle contract for serving,
     where the oracle decodes each request alone).
+
+    ``valid`` (rows,) marks how many leading tokens of each row are real
+    prompt tokens (right-pad bucketing): padded tokens are force-routed
+    to a null capacity slot — they consume no expert capacity and
+    receive zero expert output — so bucket padding can never change a
+    real token's routing (see _moe_dispatch_capacity).
     """
     T, d = x.shape
     if T > MOE_TOKEN_CHUNK:
@@ -277,33 +324,60 @@ def moe_ffn(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1
             # only one row's dispatch state is live, and recurse with
             # rows=1 so an over-long row still chunks internally
             x3 = x.reshape(rows, T // rows, d)
+            valid_r = jnp.full((rows,), T // rows, jnp.int32) \
+                if valid is None else jnp.asarray(valid, jnp.int32)
 
             @jax.checkpoint
-            def rbody(acc, xr):
-                yr, aux = moe_ffn(p, xr, cfg)
+            def rbody(acc, xs):
+                xr, vr = xs
+                yr, aux = moe_ffn(p, xr, cfg, valid=vr[None])
                 return acc + aux, yr
 
-            aux, ys = lax.scan(rbody, jnp.zeros((), jnp.float32), x3)
+            aux, ys = lax.scan(rbody, jnp.zeros((), jnp.float32),
+                               (x3, valid_r))
             return ys.reshape(T, d), aux / rows
-        chunk = max(c for c in range(1, MOE_TOKEN_CHUNK + 1) if T % c == 0)
-        nc = T // chunk
-        x3 = x.reshape(nc, chunk, d)
+        # chunk boundaries must align with the capacity window so
+        # window-local slot counting never straddles a scan step; when
+        # no aligned divisor of T exists, pad the row up to whole
+        # aligned chunks instead (pad tokens are invalid -> null slot,
+        # outputs sliced off) — never silently misalign the windows
+        W = cfg.moe.capacity_window if cfg.moe.dispatch == "capacity" else 1
+        assert W <= MOE_TOKEN_CHUNK, (W, MOE_TOKEN_CHUNK)
+        divs = [c for c in range(1, MOE_TOKEN_CHUNK + 1)
+                if T % c == 0 and c % W == 0]
+        if divs:
+            chunk, T_pad = max(divs), T
+        else:
+            chunk = MOE_TOKEN_CHUNK - MOE_TOKEN_CHUNK % W
+            T_pad = -(-T // chunk) * chunk
+        nc = T_pad // chunk
+        xp = x if T_pad == T else jnp.pad(x, ((0, T_pad - T), (0, 0)))
+        x3 = xp.reshape(nc, chunk, d)
+        v_scalar = jnp.asarray(T if valid is None else valid,
+                               jnp.int32).reshape(())
+        v_chunks = jnp.clip(v_scalar - jnp.arange(nc) * chunk, 0, chunk)
 
         @jax.checkpoint
-        def body(acc, xc):
-            yc, aux = _moe_dispatch(p, xc, cfg)
+        def body(acc, xs):
+            xc, vc = xs
+            yc, aux = _moe_dispatch(p, xc, cfg, valid=vc[None])
             return acc + aux, yc
 
-        aux, ys = lax.scan(body, jnp.zeros((), jnp.float32), x3)
-        return ys.reshape(T, d), aux / nc
-    return _moe_dispatch(p, x, cfg, rows)
+        aux, ys = lax.scan(body, jnp.zeros((), jnp.float32),
+                           (x3, v_chunks))
+        return ys.reshape(T_pad, d)[:T], aux / nc
+    return _moe_dispatch(p, x, cfg, rows, valid)
 
 
-def _moe_dispatch(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1
+def _moe_dispatch(p: Tree, x: jax.Array, cfg: ModelConfig, rows: int = 1,
+                  valid: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, jax.Array]:
     if cfg.moe.dispatch == "sorted":
+        # dropless dispatch is per-token (no capacity competition):
+        # padded rows route like any token but their outputs are sliced
+        # off by the caller — already pad-invariant, no mask needed
         return _moe_dispatch_sorted(p, x, cfg)
-    return _moe_dispatch_capacity(p, x, cfg, rows)
+    return _moe_dispatch_capacity(p, x, cfg, rows, valid)
 
 
 def _moe_router(p: Tree, x: jax.Array, cfg: ModelConfig):
@@ -346,66 +420,133 @@ def _moe_dispatch_sorted(p: Tree, x: jax.Array, cfg: ModelConfig
 
 
 def _moe_dispatch_capacity(p: Tree, x: jax.Array, cfg: ModelConfig,
-                           rows: int = 1) -> Tuple[jax.Array, jax.Array]:
-    """GShard-style capacity scatter. With ``rows`` > 1, capacity slots
-    are counted independently per batch row (s = T // rows tokens each):
-    which tokens overflow C then depends only on the row itself, never on
-    co-batched rows — with rows == 1 the math reduces to the original
-    whole-buffer counting, so single-row callers are bit-identical."""
+                           rows: int = 1,
+                           valid: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """GShard-style capacity scatter, window-local and pad-invariant.
+
+    Expert capacity is counted inside fixed windows of
+    ``cfg.moe.capacity_window`` consecutive tokens per row (aligned to
+    the row start), never across the whole row: the static slot buffer
+    holds ceil(W*K/E*cf) slots per (window, expert), while the keep
+    threshold for each window is computed from the window's VALID token
+    count — the same value an exact-length run computes — so the rule is
+    row-length-independent:
+
+      * right-pad invariance: padded tokens (``valid`` (rows,) marks the
+        real per-row token counts) are force-routed to the null slot —
+        they consume no capacity, receive zero expert output, and leave
+        every real token's window population and threshold untouched;
+      * prefix transparency: a suffix-only prefill whose prefix length
+        is a multiple of W (the engine aligns prefix hits) sees exactly
+        the windows the full run gives its suffix tokens, so capacity
+        competition never crosses the reuse boundary;
+      * batch invariance (as before): windows are within-row, so
+        co-batched rows cannot shift which tokens overflow.
+
+    With rows == 1 and no padding the math is the window-chunked
+    analogue of the original whole-row counting (single-row callers
+    remain batch-size independent).
+    """
     m = cfg.moe
     T, d = x.shape
     E, K = m.num_experts, m.top_k
     R = max(1, rows)
     assert T % R == 0, (T, R)
     s = T // R
-    C = max(1, int(math.ceil(s * K / E * m.capacity_factor)))
+    # effective window: a row shorter than the configured window IS its
+    # own (single) window — routing-identical to padding it out to W
+    # (same valid-assignment order, same valid-count threshold), but the
+    # one-token decode step keeps its original slot buffer instead of
+    # paying W x padding FLOPs inside the fused hot loop
+    W = min(m.capacity_window, s)
+    nw = -(-s // W)
+    s_pad = nw * W
+    G = R * nw                                            # capacity windows
+    C = max(1, int(math.ceil(W * K / E * m.capacity_factor)))
+
+    if valid is None:
+        valid_r = jnp.full((R,), s, jnp.int32)
+    else:
+        valid_r = jnp.asarray(valid, jnp.int32).reshape(R)
+
     logits = (x @ p["router"]).astype(jnp.float32)        # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, idx = lax.top_k(probs, K)                      # (T, K)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
 
-    # per-row choice-major flattening: within each row, all first
+    vmask = jnp.arange(s_pad)[None, :] < valid_r[:, None]  # (R, s_pad)
+
+    def padrow(t):                      # (T, ...) -> (R, s_pad, ...)
+        t = t.reshape((R, s) + t.shape[1:])
+        if s_pad != s:
+            widths = [(0, 0)] * t.ndim
+            widths[1] = (0, s_pad - s)
+            t = jnp.pad(t, widths)
+        return t
+
+    # per-window choice-major flattening: within each window, all first
     # choices, then all second choices...
-    flat_e = jnp.swapaxes(idx.reshape(R, s, K), 1, 2).reshape(R, K * s)
-    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (R, K*s, E)
-    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1)           # (R, K*s, E)
+    flat_e = jnp.swapaxes(padrow(idx).reshape(G, W, K), 1, 2) \
+        .reshape(G, K * W)
+    vm_w = vmask.reshape(G, W)
+    vflat = jnp.tile(vm_w[:, None, :], (1, K, 1)).reshape(G, K * W)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32) \
+        * vflat[..., None].astype(jnp.int32)              # (G, K*W, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1)           # (G, K*W, E)
     pos_tok = jnp.take_along_axis(pos_in_e, flat_e[..., None],
-                                  axis=2)[..., 0]         # (R, K*s)
-    keep = pos_tok < C
-    row_base = (jnp.arange(R) * E * C)[:, None]
-    slot = jnp.where(keep, row_base + flat_e * C + pos_tok,
-                     R * E * C)                           # overflow -> dropped
+                                  axis=2)[..., 0]         # (G, K*W)
+    # keep threshold from the window's valid token count (traced): the
+    # exact-length run evaluates the identical expression, so bucket
+    # padding can never change which tokens overflow
+    n_valid_w = vm_w.sum(axis=1).astype(jnp.float32)      # (G,)
+    c_thr = jnp.ceil(n_valid_w * (K * m.capacity_factor / E)) \
+        .astype(jnp.int32)
+    # the f32 ceil can land one above the f64-derived buffer capacity C
+    # when W*K*cf/E is an exact integer — clamp, or a kept token's slot
+    # would alias the next expert's slot 0
+    c_thr = jnp.minimum(c_thr, C)
+    keep = vflat & (pos_tok < c_thr[:, None])
+    grp_base = (jnp.arange(G) * E * C)[:, None]
+    slot = jnp.where(keep, grp_base + flat_e * C + pos_tok,
+                     G * E * C)            # overflow AND pads -> null slot
     slot = slot.reshape(-1)
     keep = keep.reshape(-1)
 
-    # (R, K*s, d) rows of x in the same per-row choice-major order
-    x_kt = jnp.tile(x.reshape(R, s, d), (1, K, 1)).reshape(R * K * s, d)
-    buf = jnp.zeros((R * E * C + 1, d), x.dtype).at[slot].add(x_kt)
-    xe = buf[: R * E * C].reshape(R, E, C, d)
+    # (G, K*W, d) rows of x in the same per-window choice-major order
+    x_kt = jnp.tile(padrow(x).reshape(G, W, d), (1, K, 1)) \
+        .reshape(G * K * W, d)
+    buf = jnp.zeros((G * E * C + 1, d), x.dtype).at[slot].add(x_kt)
+    xe = buf[: G * E * C].reshape(G, E, C, d)
     # canonical EP layout under *_ep act rules (no-op otherwise): expert
     # dim on `model`, capacity on `data` -> expert matmuls are local and
     # only the token<->capacity resharding (all-to-all) moves data.
-    xe = jnp.moveaxis(xe, 0, 1).reshape(E, R * C, d)
+    xe = jnp.moveaxis(xe, 0, 1).reshape(E, G * C, d)
     xe = constrain(xe, ("expert_act", "cap_act", None))
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
         jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
     h = constrain(h, ("expert_act", "cap_act", None))
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
     ye = constrain(ye, ("expert_act", "cap_act", None))
-    ye = jnp.moveaxis(ye.reshape(E, R, C, d), 0, 1).reshape(R * E * C, d)
+    ye = jnp.moveaxis(ye.reshape(E, G, C, d), 0, 1).reshape(G * E * C, d)
     ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
     y_kt = ye[slot] * keep[:, None].astype(ye.dtype)
-    gates_kt = jnp.swapaxes(gates.reshape(R, s, K), 1, 2).reshape(-1)
+    gates_kt = jnp.swapaxes(padrow(gates).reshape(G, W, K), 1, 2) \
+        .reshape(-1)
     y = (y_kt * gates_kt[:, None].astype(ye.dtype)) \
-        .reshape(R, K, s, d).sum(1).reshape(T, d)
+        .reshape(G, K, W, d).sum(1).reshape(R, s_pad, d)[:, :s] \
+        .reshape(T, d)
 
     if m.num_shared_experts:
-        y = y + mlp(p["shared"], x)
+        y = y + mlp(p["shared"], x)    # per-token: pad rows sliced upstream
 
-    # load-balance aux loss (Switch-style)
-    frac = jnp.mean(onehot.astype(jnp.float32), axis=0)   # assignment fraction
-    mean_p = jnp.mean(probs, axis=0)
-    aux = E * jnp.sum(frac * mean_p) * m.router_aux_coef
+    # load-balance aux loss (Switch-style) over VALID assignments only,
+    # at the ORIGINAL scale (per-row assignment counts, not a
+    # normalized fraction — router_aux_coef was tuned against it)
+    counts = onehot.astype(jnp.float32).sum((0, 1)) / R           # (E,)
+    vtok = vmask[:, :s].reshape(T).astype(jnp.float32)
+    mean_p = (probs * vtok[:, None]).sum(0) / jnp.maximum(vtok.sum(), 1.0)
+    aux = E * jnp.sum(counts * mean_p) * m.router_aux_coef
     return y, aux
 
 
@@ -435,15 +576,30 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 
     x: (b, s, nh, hd); dt: (b, s, nh); A: (nh,); B, C: (b, s, n).
     Returns y (b, s, nh, hd) and final state (b, nh, n, hd).
+
+    The sequence is right-padded up to a whole number of chunks with
+    dt == 0 rows: a zero-dt token neither decays nor updates the carried
+    state (exp(0) == 1, zero write weight), so the chunk PARTITION of a
+    length-s run is a pure function of ceil(s/chunk) — two runs whose
+    valid tokens agree produce the same final state even when their
+    padded lengths differ (the masked tail chunks are state no-ops).
+    This is what makes the recurrent state of a bucket-padded prefill
+    identical to the exact-length run (callers mask dt for their own
+    right-pad tokens; see mamba_sublayer_seq).
     """
     b, s, nh, hd = x.shape
     n = B.shape[-1]
-    chunk = min(chunk, s)
-    if s % chunk != 0:  # largest divisor of s not exceeding requested chunk
-        chunk = max(c for c in range(1, chunk + 1) if s % c == 0)
-    nc = s // chunk
+    # chunk must be a function of the CONFIG only (never of s): two runs
+    # of different padded lengths must partition their common valid
+    # prefix into identical chunks for the state to match bitwise
+    nc = -(-s // chunk)
+    s_pad = nc * chunk
 
     def resh(t):
+        if s_pad != s:
+            widths = [(0, 0)] * t.ndim
+            widths[1] = (0, s_pad - s)
+            t = jnp.pad(t, widths)       # zero x/B/C and — crucially — dt
         return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
 
     xs, dts, Bs, Cs = resh(x), resh(dt), resh(B), resh(C)
@@ -478,7 +634,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
         return S, y.astype(x.dtype)
 
     S, ys = lax.scan(body, init_state, (xs, dts, Bs, Cs))
-    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, hd)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, nh, hd)[:, :s]
     return y, S
 
 
@@ -496,10 +652,21 @@ def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 
 
 def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
-                       return_state: bool = False):
+                       return_state: bool = False,
+                       valid_len: Optional[jax.Array] = None):
+    """``valid_len`` (b,) marks the real (un-padded) token count per row
+    of a right-pad-bucketed batch. Padded tokens are masked out of the
+    recurrence by zeroing their dt AFTER the softplus — a zero-dt token
+    neither decays nor writes the SSD state (see ssd_scan) — and the
+    conv tails returned for decode hand-off are gathered at each row's
+    valid boundary, not the padded end. The causal conv itself is
+    right-pad-inert (outputs at valid positions never read later
+    positions), so the forward at valid positions and the final
+    recurrent state are identical to the exact-length run."""
     s_cfg = cfg.ssm_cfg
     d_in = s_cfg.expand * cfg.d_model
     nh = d_in // s_cfg.head_dim
+    s = h.shape[1]
     x = rmsnorm(h, p["norm"], cfg.norm_eps)
     z = x @ p["w_z"]
     xin = x @ p["w_x"]
@@ -510,6 +677,9 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
     bc = jax.nn.silu(_causal_conv1d(bin_, p["conv_b"]))
     cc = jax.nn.silu(_causal_conv1d(cin, p["conv_c"]))
     dt = jax.nn.softplus(dt.astype(jnp.float32))
+    if valid_len is not None:
+        vmask = jnp.arange(s)[None, :] < valid_len[:, None]    # (b, s)
+        dt = jnp.where(vmask[..., None], dt, 0.0)
     A = -jnp.exp(p["a_log"].astype(jnp.float32))
     x4 = constrain(_split_heads(xc, nh), ("batch", None, "q_heads_act", None))
     dt = constrain(dt, ("batch", None, "q_heads_act"))
@@ -520,10 +690,23 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
     out = h + y @ p["w_out"]
     if return_state:
         k = s_cfg.conv_kernel
+
+        def tail(t):                    # (b, s, c) -> (b, c, k-1)
+            if valid_len is None:
+                return jnp.swapaxes(t[:, -(k - 1):, :], 1, 2)
+            # last k-1 VALID inputs per row (zeros left of the sequence
+            # start, exactly what _causal_conv1d pads with)
+            idx = valid_len[:, None] - (k - 1) + jnp.arange(k - 1)[None]
+            g = jnp.take_along_axis(t, jnp.clip(idx, 0, s - 1)[..., None],
+                                    axis=1)
+            g = jnp.where((idx >= 0)[..., None], g,
+                          jnp.zeros((), t.dtype))
+            return jnp.swapaxes(g, 1, 2)
+
         tails = {
-            "conv_x": jnp.swapaxes(xin[:, -(k - 1):, :], 1, 2),
-            "conv_b": jnp.swapaxes(bin_[:, -(k - 1):, :], 1, 2),
-            "conv_c": jnp.swapaxes(cin[:, -(k - 1):, :], 1, 2),
+            "conv_x": tail(xin),
+            "conv_b": tail(bin_),
+            "conv_c": tail(cin),
             "state": state,
         }
         return out, tails
@@ -566,15 +749,18 @@ def mamba_sublayer_step(p: Tree, h: jax.Array, cache: Tree,
 
 # ---------------------------------------------------------------- blocks
 
-def _ffn_sublayer(p: Tree, h: jax.Array, cfg: ModelConfig, is_moe: bool):
+def _ffn_sublayer(p: Tree, h: jax.Array, cfg: ModelConfig, is_moe: bool,
+                  valid_len: Optional[jax.Array] = None):
     aux = jnp.zeros((), jnp.float32)
     if is_moe:
         x = rmsnorm(h, p["norm2"], cfg.norm_eps)
         shp = x.shape
         # batch rows are independent requests: capacity dispatch must
-        # count expert slots per row (batch-invariant serving)
+        # count expert slots per row (batch-invariant serving), with
+        # right-pad bucket tokens routed to the null slot (valid_len)
         y, aux = moe_ffn(p["moe"], x.reshape(-1, shp[-1]), cfg,
-                         rows=shp[0] if len(shp) == 3 else 1)
+                         rows=shp[0] if len(shp) == 3 else 1,
+                         valid=valid_len if len(shp) == 3 else None)
         h = h + y.reshape(shp)
     elif cfg.d_ff > 0:
         h = h + mlp(p["mlp"], rmsnorm(h, p["norm2"], cfg.norm_eps))
@@ -585,13 +771,20 @@ def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
               positions: jax.Array, causal: bool,
               window: Optional[int], enc_out: Optional[jax.Array],
               collect_cache: bool,
-              prefix: Optional[Tree] = None
+              prefix: Optional[Tree] = None,
+              prefix_len=None,
+              valid_len: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, jax.Array, Tree]:
     """Apply one repeating block (period sublayers). Returns (h, aux, cache).
 
     ``prefix`` maps "sub{i}" -> {"k", "v"} reused prefix KVCaches
-    (b, plen, kv_dim) for this block's attention sublayers (prefix
-    reuse is gated upstream to attention-only stacks)."""
+    (b, P, kv_dim) for this block's attention sublayers, right-padded to
+    the static prefix bucket P with only the first ``prefix_len``
+    (traced) rows real (prefix reuse is gated upstream to
+    attention-only stacks). ``valid_len`` (b,) marks real suffix tokens
+    of a right-pad-bucketed batch — the pad-invariance contract every
+    sublayer honors (masked attention queries, zero-dt SSD recurrence,
+    null-slot MoE capacity)."""
     kinds = cfg.layer_kinds()
     moe_mask = cfg.moe_layer_mask()
     period = block_period(cfg)
@@ -610,25 +803,29 @@ def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
                 h, (k, v) = attn_sublayer_seq(
                     p, h, cfg, causal=causal, positions=positions,
                     window=window, use_rope=use_rope, return_kv=True,
-                    prefix_kv=pfx)
+                    prefix_kv=pfx, prefix_len=prefix_len,
+                    q_valid=valid_len)
                 c["k"], c["v"] = k, v
             else:
                 h = attn_sublayer_seq(p, h, cfg, causal=causal,
                                       positions=positions, window=window,
-                                      use_rope=use_rope, prefix_kv=pfx)
+                                      use_rope=use_rope, prefix_kv=pfx,
+                                      prefix_len=prefix_len,
+                                      q_valid=valid_len)
         else:
             if collect_cache:
-                h, tails = mamba_sublayer_seq(p, h, cfg, return_state=True)
+                h, tails = mamba_sublayer_seq(p, h, cfg, return_state=True,
+                                              valid_len=valid_len)
                 c.update(tails)
             else:
-                h = mamba_sublayer_seq(p, h, cfg)
+                h = mamba_sublayer_seq(p, h, cfg, valid_len=valid_len)
         if enc_out is not None:
             if collect_cache:
                 h, (xk, xv) = cross_attn_seq(p, h, enc_out, cfg, return_kv=True)
                 c["xk"], c["xv"] = xk, xv
             else:
                 h = cross_attn_seq(p, h, enc_out, cfg)
-        h, aux = _ffn_sublayer(p, h, cfg, moe_mask[i])
+        h, aux = _ffn_sublayer(p, h, cfg, moe_mask[i], valid_len=valid_len)
         aux_total = aux_total + aux
         cache_out[f"sub{i}"] = c
     return h, aux_total, cache_out
@@ -737,16 +934,23 @@ def _embed_inputs(cfg: ModelConfig, params: Tree, batch: Tree) -> jax.Array:
 def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
                 collect_cache: bool, remat: bool,
                 window: Optional[int] = None,
-                prefix: Optional[Tree] = None, prefix_len: int = 0
+                prefix: Optional[Tree] = None, prefix_len=0,
+                valid_len: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, jax.Array, Optional[Tree]]:
     """Shared train/prefill path. Returns (hidden (b,s,d), aux, cache|None).
 
     With ``prefix`` (per-block "sub{i}" -> {"k","v"} stacked like
-    params["blocks"]: leading dim num_blocks, then (b, prefix_len,
-    kv_dim)), the batch holds only the uncached SUFFIX tokens: positions
-    start at ``prefix_len`` and every attention sublayer attends over
-    the reused prefix KVCache ++ the fresh suffix keys (suffix-only
-    prefill, paper §2.2.1 prefix reuse on the real path)."""
+    params["blocks"]: leading dim num_blocks, then (b, P, kv_dim) with P
+    the static prefix bucket), the batch holds only the uncached SUFFIX
+    tokens: positions start at ``prefix_len`` (a traced scalar <= P;
+    padded prefix rows are masked out of attention) and every attention
+    sublayer attends over the reused prefix KVCache ++ the fresh suffix
+    keys (suffix-only prefill, paper §2.2.1 prefix reuse on the real
+    path). ``valid_len`` (b,) is the pad-invariance mask for right-pad
+    length-bucketed batches: tokens at row index >= valid_len[b] attend
+    to nothing, leave the SSD recurrence untouched, and take no MoE
+    capacity (the shared jitted prefill serves EVERY family from
+    O(num_buckets) compiled programs)."""
     h = _embed_inputs(cfg, params, batch)
     s = h.shape[1]
     positions = prefix_len + jnp.arange(s)
@@ -761,7 +965,10 @@ def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
         blkp, pfx = xs if prefix is not None else (xs, None)
         hh, a, cache = block_seq(cfg, blkp, hh, positions=positions,
                                  causal=True, window=window, enc_out=enc_out,
-                                 collect_cache=collect_cache, prefix=pfx)
+                                 collect_cache=collect_cache, prefix=pfx,
+                                 prefix_len=prefix_len if prefix is not None
+                                 else None,
+                                 valid_len=valid_len)
         hh = constrain(hh, ("batch", "seq_act", None))
         return (hh, aux + a), cache
 
@@ -824,18 +1031,26 @@ def forward_train(cfg: ModelConfig, params: Tree, batch: Tree,
 def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
                     window: Optional[int] = None,
                     last_index: Optional[jax.Array] = None,
-                    prefix: Optional[Tree] = None, prefix_len: int = 0
+                    prefix: Optional[Tree] = None, prefix_len=0
                     ) -> Tuple[jax.Array, Tree]:
     """Returns (first generated token (b,), decode cache).
 
     `last_index` (b,) selects each row's final prompt position for ragged
-    right-padded batches (default: the last column). With
-    `prefix`/`prefix_len` (see forward_seq) the batch is the uncached
-    suffix only and the returned cache covers just those suffix tokens —
-    the caller stitches prefix ++ suffix back together."""
+    right-padded batches (default: the last column) AND doubles as the
+    pad-invariance mask: rows are treated as valid only up to it, so a
+    length-bucketed batch is exact for every family (masked attention
+    queries, zero-dt SSD recurrence, null-slot MoE capacity — see
+    forward_seq). With `prefix`/`prefix_len` (see forward_seq) the batch
+    is the uncached suffix only — `prefix_len` may be a traced scalar
+    under a bucket-padded prefix — and the returned cache covers just
+    those suffix tokens; the caller stitches prefix ++ suffix back
+    together."""
+    valid_len = None if last_index is None \
+        else last_index.astype(jnp.int32) + 1
     h, _, caches = forward_seq(cfg, params, batch, collect_cache=True,
                                remat=False, window=window,
-                               prefix=prefix, prefix_len=prefix_len)
+                               prefix=prefix, prefix_len=prefix_len,
+                               valid_len=valid_len)
     if last_index is None:
         h_last = h[:, -1, :]
     else:

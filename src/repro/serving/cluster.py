@@ -62,9 +62,12 @@ class PrefillNode:
                                     bucket_prefill=bucket_prefill)
         # prefix reuse needs a pure-attention stack (SSM/hybrid state is
         # not restorable from a KV prefix; attn-free has no KV at all) —
-        # incompatible archs transparently bypass the index
+        # incompatible archs transparently bypass the index. Capacity
+        # MoE participates since capacity went window-local; its hits
+        # are rounded down to capacity-window boundaries (prefix_align)
         self.prefix_cache = bool(prefix_cache) \
             and self.engine.supports_prefix_reuse
+        self.prefix_align = self.engine.prefix_align
         self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
                                 block_size=block_size,
                                 enable_prefix_cache=self.prefix_cache)
@@ -95,7 +98,8 @@ class PrefillNode:
         if not self.prefix_cache:
             return 0
         return self.pool.peek_prefix(req.tokens,
-                                     namespace=_frames_ns(req))
+                                     namespace=_frames_ns(req),
+                                     align=self.prefix_align)
 
     def prefix_stats(self) -> Dict[str, float]:
         return {
@@ -120,7 +124,8 @@ class PrefillNode:
             cached = 0
             if self.prefix_cache:
                 cached = self.pool.acquire_prefix(
-                    req.rid, req.tokens, namespace=_frames_ns(req))
+                    req.rid, req.tokens, namespace=_frames_ns(req),
+                    align=self.prefix_align)
             (warm.append((req, cached)) if cached else cold.append(req))
 
         def _stash_for(rid):

@@ -9,9 +9,16 @@ supported: dense / moe / ssm / hybrid / vlm-backbone / audio (enc-dec).
 Hot-loop shape discipline (the §2.2.3 perf model only holds if the
 engines run as fast as the hardware allows):
 
-  * prefill batches are padded to power-of-two length BUCKETS (for
-    pad-inert stacks) and run through one shared jitted forward, so the
-    compile count is O(num_buckets), not O(distinct prompt lengths);
+  * prefill batches are padded to power-of-two length BUCKETS for EVERY
+    family and run through one shared jitted forward, so the compile
+    count is O(num_buckets), not O(distinct prompt lengths). Padding is
+    exact by the model's pad-invariance contract (masked attention
+    queries, zero-dt SSD recurrence, null-slot window-local MoE
+    capacity — see models.modeling.forward_seq); suffix-only
+    (prefix-reuse) prefills additionally bucket the PREFIX KV length,
+    so warm admissions share one program per (prefix bucket, suffix
+    bucket) pair. ``REPRO_PREFILL=exact`` (one-release escape hatch,
+    mirroring ``REPRO_DECODE=eager``) restores exact-length grouping;
   * the decode iteration is ONE jitted, buffer-donated device program
     (``models.modeling.decode_step_jit``) over fixed-shape slot state —
     padded (max_slots,) token/position/mask arrays, a power-of-two
@@ -56,9 +63,12 @@ PREFILL_BUCKET_MIN = 16
 
 # One shared jitted prefill across every engine instance: the cache is
 # keyed on (cfg, shapes), so N serving nodes of the same arch compile
-# each length bucket once, not once per node.
+# each length bucket once, not once per node. prefix_len is a TRACED
+# operand (the prefix KV is padded to a static bucket), so warm
+# prefix-reuse admissions retrace per (prefix bucket, suffix bucket) —
+# never per distinct prefix length.
 _jit_forward_prefill = jax.jit(
-    forward_prefill, static_argnames=("cfg", "window", "prefix_len"))
+    forward_prefill, static_argnames=("cfg", "window"))
 
 
 def prefill_compile_count() -> int:
@@ -105,7 +115,9 @@ class PrefillEngine:
     tokens. ``compute_tokens`` counts real prompt tokens pushed through
     the forward pass — bucket padding is tracked separately in
     ``padded_tokens`` (the parity tests and benchmarks assert savings on
-    the exact counter).
+    the exact counter). ``prefill_batches`` / ``bucket_hits`` ledger how
+    often a batch landed on an already-seen shape bucket (a compile-
+    cache hit for this engine) — the frontend's compile-stall telemetry.
     """
 
     def __init__(self, cfg: ModelConfig, params: Tree, *,
@@ -123,16 +135,24 @@ class PrefillEngine:
         self._layer_fractions: Tuple[float, ...] = tuple(
             (bk * period + sb + 1) / total for bk, sb in self._attn_order)
         if bucket_prefill is None:
-            bucket_prefill = os.environ.get(
-                "REPRO_PREFILL_BUCKET", "1") != "0"
+            # one-release escape hatch mirroring REPRO_DECODE=eager
+            # (legacy REPRO_PREFILL_BUCKET=0 still honored)
+            bucket_prefill = (
+                os.environ.get("REPRO_PREFILL", "bucket") != "exact"
+                and os.environ.get("REPRO_PREFILL_BUCKET", "1") != "0")
         if jit_prefill is None:
             jit_prefill = os.environ.get("REPRO_PREFILL_JIT", "1") != "0"
-        self.bucket_prefill = bool(bucket_prefill) and self.supports_bucketing
+        # bucketing serves EVERY family: the forward is pad-invariant by
+        # contract (there is no per-arch gate anymore)
+        self.bucket_prefill = bool(bucket_prefill)
         self.jit_prefill = bool(jit_prefill)
         self.compute_tokens = 0      # real prompt tokens through the fwd
         self.padded_tokens = 0       # bucket-padding tokens on top
         self.reused_tokens = 0       # tokens served from a prefix hit
         self.prefix_prefills = 0     # suffix-only prefills executed
+        self.prefill_batches = 0     # jitted batch launches
+        self.bucket_hits = 0         # launches on an already-seen shape
+        self._shapes_seen: set = set()
 
     def _prefill(self, batch: Tree, *, last_index: jax.Array,
                  prefix: Optional[Tree] = None, prefix_len: int = 0):
@@ -166,36 +186,24 @@ class PrefillEngine:
         layers carry recurrent state that a KV prefix cannot restore, and
         attn-free stacks have no KV to reuse. Encoder-decoder is fine
         (the encoder reruns; only decoder self-attn KV is reused).
-        Capacity-dispatch MoE is also gated off: its token dropping
-        depends on the whole batch's T, so suffix-only prefill could
-        silently change outputs — only the dropless "sorted" dispatch is
-        prefix-transparent. (Deliberately NOT delegated to
-        supports_bucketing: pad-inertness and prefix-transparency are
-        different properties that only coincidentally share conditions
-        today, and each gate may be lifted independently.)"""
-        if not self._attn_order or self._mamba_order:
-            return False
-        m = self.cfg.moe
-        if m is not None and m.dispatch == "capacity" \
-                and any(self.cfg.moe_layer_mask()):
-            return False
-        return True
+        Capacity-dispatch MoE is prefix-transparent since capacity went
+        window-local and row-length-independent — its hits only need the
+        prefix length aligned to the capacity window (``prefix_align``,
+        enforced by the pool's aligned acquire)."""
+        return bool(self._attn_order) and not self._mamba_order
 
     @property
-    def supports_bucketing(self) -> bool:
-        """Right-padding to a length bucket is exact only when padded
-        tokens are provably inert for the real rows: causal attention
-        ignores right pads and MLP / dropless-sorted MoE are per-token,
-        but SSM conv/scan states absorb pads, and capacity-dispatch MoE
-        counts expert slots over the (padded) row length. Those stacks
-        keep exact-length grouping."""
-        if self._mamba_order:
-            return False
+    def prefix_align(self) -> int:
+        """Token alignment a reused prefix must satisfy. Capacity MoE
+        counts expert slots in fixed windows of cfg.moe.capacity_window
+        tokens: a prefix cut at a window boundary guarantees the suffix
+        run sees exactly the windows a full run would give its suffix
+        tokens (no capacity competition across the reuse boundary)."""
         m = self.cfg.moe
         if m is not None and m.dispatch == "capacity" \
                 and any(self.cfg.moe_layer_mask()):
-            return False
-        return True
+            return m.capacity_window
+        return 1
 
     def _bucket_len(self, n: int) -> int:
         b = PREFILL_BUCKET_MIN
@@ -203,15 +211,23 @@ class PrefillEngine:
             b *= 2
         return min(b, max(self.cfg.max_seq_len, n))
 
+    def _count_launch(self, shape_key: Tuple) -> None:
+        self.prefill_batches += 1
+        if shape_key in self._shapes_seen:
+            self.bucket_hits += 1
+        else:
+            self._shapes_seen.add(shape_key)
+
     def run(self, token_lists: Sequence[Sequence[int]],
             frames: Optional[Sequence] = None,
             on_layer: Optional[OnLayer] = None) -> List[PrefillOutput]:
         """Ragged batches are grouped into padded power-of-two length
-        buckets when the arch is pad-inert (retrace count becomes
-        O(num_buckets) under tidal ragged traffic); otherwise into
-        equal-length sub-batches (causal attention ignores right
-        padding, but SSM/conv states would absorb padded tokens —
-        observed as hybrid-arch divergence).
+        buckets for EVERY family (retrace count becomes O(num_buckets)
+        under tidal ragged traffic): right padding is exact by the
+        model's pad-invariance contract — causal attention masks padded
+        queries, the SSD recurrence skips zero-dt pad tokens bit-exactly,
+        and window-local capacity MoE routes pads to a null slot.
+        ``REPRO_PREFILL=exact`` falls back to equal-length sub-batches.
 
         ``on_layer`` enables the layer-streaming mode: each request's
         per-layer (k, v) is yielded in network order (see OnLayer) for
@@ -246,6 +262,7 @@ class PrefillEngine:
         batch = {"tokens": jnp.asarray(toks)}
         self.compute_tokens += sum(lens)
         self.padded_tokens += b * s - sum(lens)
+        self._count_launch((b, s))
         if cfg.is_encoder_decoder:
             assert frames is not None, "enc-dec prefill needs frames"
             batch["frames"] = jnp.stack([jnp.asarray(f) for f in frames])
@@ -290,13 +307,15 @@ class PrefillEngine:
         KVCache gathered from the paged pool (kernels.kv_gather), K and V
         packed along the last axis exactly as the pool stores them. Runs
         the forward pass over only ``suffix_tokens`` (right-padded to a
-        length bucket — pad rows are causally inert and sliced off) with
-        every attention sublayer attending over prefix ++ suffix;
+        length bucket — pad rows attend to nothing and are sliced off)
+        with every attention sublayer attending over prefix ++ suffix;
         returns a PrefillOutput whose k/v cover the FULL prompt (prefix
         stitched back on) so the transfer/decode path downstream is
-        unchanged. Retraces scale with distinct (prefix_len, bucket)
-        pairs: the prefix KV length cannot be padded without masking the
-        reused keys, so only the suffix is bucketed.
+        unchanged. The prefix KV is right-padded to its own power-of-two
+        bucket with the real length passed as a TRACED scalar (padded
+        prefix keys are masked from every softmax), so warm admissions
+        retrace per (prefix bucket, suffix bucket) — O(num_buckets^2)
+        programs cluster-wide — never per distinct prefix length.
         """
         cfg = self.cfg
         assert self.supports_prefix_reuse, cfg.name
@@ -304,6 +323,14 @@ class PrefillEngine:
         assert s >= 1, "prefix hit must leave at least one suffix token"
         s_pad = self._bucket_len(s) if self.bucket_prefill else s
         plen = int(prefix_kv.shape[1])
+        # capacity-MoE prefix hits must land on capacity-window
+        # boundaries (the pool's aligned acquire guarantees this; a
+        # misaligned prefix would shift the suffix's capacity windows)
+        assert plen % self.prefix_align == 0, (plen, self.prefix_align)
+        p_pad = self._bucket_len(plen) if self.bucket_prefill else plen
+        if p_pad != plen:
+            prefix_kv = jnp.pad(prefix_kv,
+                                ((0, 0), (0, p_pad - plen), (0, 0)))
         kvd = cfg.kv_dim
         k_pre, v_pre = prefix_kv[..., :kvd], prefix_kv[..., kvd:]
         period = block_period(cfg)
@@ -313,7 +340,7 @@ class PrefillEngine:
         for sb in range(period):
             ks = jnp.stack([k_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
             vs = jnp.stack([v_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
-            # (num_blocks, b=1, plen, kv_dim), scanned alongside params
+            # (num_blocks, b=1, p_pad, kv_dim), scanned alongside params
             prefix[f"sub{sb}"] = {"k": ks[:, None], "v": vs[:, None]}
         toks = list(suffix_tokens) + [0] * (s_pad - s)
         batch = {"tokens": jnp.asarray([toks], jnp.int32)}
@@ -322,18 +349,23 @@ class PrefillEngine:
             batch["frames"] = jnp.asarray(frames)[None]
         first, cache = self._prefill(
             batch, last_index=jnp.asarray([s - 1]), prefix=prefix,
-            prefix_len=plen)
+            prefix_len=jnp.asarray(plen, jnp.int32))
         self.compute_tokens += s
-        self.padded_tokens += s_pad - s
+        self.padded_tokens += (s_pad - s) + (p_pad - plen)
         self.reused_tokens += plen
         self.prefix_prefills += 1
+        self._count_launch(("suffix", p_pad, s_pad))
         layers = cache["layers"]
         k_suf = jnp.stack([layers[f"sub{sb}"]["k"][bk, 0, :s]
                            for bk, sb in self._attn_order])
         v_suf = jnp.stack([layers[f"sub{sb}"]["v"][bk, 0, :s]
                            for bk, sb in self._attn_order])
-        k = jnp.concatenate([k_pre.astype(k_suf.dtype), k_suf], axis=1)
-        v = jnp.concatenate([v_pre.astype(v_suf.dtype), v_suf], axis=1)
+        # stitch with the REAL prefix rows only (bucket pads sliced off):
+        # no KV row past the ledgered compute/reused tokens survives
+        k = jnp.concatenate([k_pre[:, :plen].astype(k_suf.dtype), k_suf],
+                            axis=1)
+        v = jnp.concatenate([v_pre[:, :plen].astype(v_suf.dtype), v_suf],
+                            axis=1)
         cross: Optional[Tree] = None
         if cfg.is_encoder_decoder:
             cross = {}

@@ -51,6 +51,7 @@ from repro.core.zookeeper import MetaStore
 from repro.models.config import ModelConfig
 from repro.models.params import init_params
 from repro.serving.cluster import DecodeNode, PrefillNode, ServeRequest
+from repro.serving.engine import prefill_compile_count
 from repro.serving.transfer_sched import TransferJob, TransferScheduler
 
 
@@ -351,7 +352,15 @@ class ServeGroup:
         stalls paid inside the tick's critical section. Both carry the
         group's MEASURED engine wall times (the same numbers the vclock
         charges), so the overlap pipeline's ready/busy arithmetic tracks
-        the fused engines' real speed rather than a profiled guess."""
+        the fused engines' real speed rather than a profiled guess.
+
+        Prefill compile-stall telemetry rides along: the SHARED jitted
+        prefill's live compile count (cluster-wide, O(num_buckets) under
+        bucketing), this group's bucket hit rate (fraction of batch
+        launches landing on an already-compiled shape — misses are
+        compile stalls the RatioAdjuster/benchmarks can now see) and the
+        pad-waste ratio (bucket-padding tokens over all tokens pushed
+        through the forward)."""
         if self.sched is not None:
             out = dict(self.sched.stats())
             out["overlapped"] = 1.0
@@ -367,6 +376,16 @@ class ServeGroup:
         # medians: first samples per shape carry one-time JIT compile cost
         out["decode_step_median_s"] = _median(self.decode_step_s[-32:])
         out["prefill_batch_median_s"] = _median(self.prefill_batch_s[-32:])
+        engines = [p.engine for p in self.prefills]
+        batches = sum(e.prefill_batches for e in engines)
+        hits = sum(e.bucket_hits for e in engines)
+        comp = sum(e.compute_tokens for e in engines)
+        padt = sum(e.padded_tokens for e in engines)
+        out["prefill_compile_count"] = float(prefill_compile_count())
+        out["prefill_batches"] = float(batches)
+        out["prefill_bucket_hit_rate"] = hits / batches if batches else 0.0
+        out["prefill_pad_waste"] = padt / (comp + padt) \
+            if comp + padt else 0.0
         return out
 
     def stats(self) -> Dict[str, float]:

@@ -210,39 +210,46 @@ class PagedKVPool:
             return chain, ((best, best_l) if best is not None else None)
 
     def peek_prefix(self, tokens: Sequence[int],
-                    namespace: Optional[str] = None) -> int:
+                    namespace: Optional[str] = None,
+                    align: int = 1) -> int:
         """Read-only match length in tokens (for routing affinity);
-        does not touch refcounts or recency."""
+        does not touch refcounts or recency. ``align`` rounds the
+        reported hit DOWN to a multiple (capacity-MoE engines require
+        window-aligned prefixes — see PrefillEngine.prefix_align)."""
         if not self.enable_prefix_cache or len(tokens) < 2:
             return 0
         full, tail = self._match(tokens, namespace)
         got = len(full) * self.block_size + (tail[1] if tail else 0)
-        return min(got, len(tokens) - 1)
+        got = min(got, len(tokens) - 1)
+        return got - got % max(1, align)
 
     def acquire_prefix(self, rid: int, tokens: Sequence[int],
-                       namespace: Optional[str] = None) -> int:
+                       namespace: Optional[str] = None,
+                       align: int = 1) -> int:
         """Prefix lookup at admission: matched whole blocks become shared
         (refcounted) leading blocks of rid's allocation; a partial tail
         match is copy-on-written into a private block. Returns the cached
         token count (always < len(tokens): the last prompt token is
-        recomputed so prefill still yields first-token logits)."""
+        recomputed so prefill still yields first-token logits). With
+        ``align`` > 1 the hit is rounded DOWN to a multiple — a
+        whole-block match past the boundary degrades into a COW tail (or
+        is dropped), so engines whose suffix math needs aligned reuse
+        boundaries (window-local capacity MoE) stay exact."""
         if not self.enable_prefix_cache or len(tokens) < 2:
             return 0
         self.lookups += 1
         full, tail = self._match(tokens, namespace)
         bs = self.block_size
-        limit = len(tokens) - 1
-        n_full = min(len(full), limit // bs)
-        tail_node, rem = None, 0
-        if n_full < len(full):
-            # a whole-block match truncated by `limit` turns into a COW
-            tail_node, rem = full[n_full], min(bs, limit - n_full * bs)
-        elif tail is not None:
-            tail_node, rem = tail[0], min(tail[1], limit - n_full * bs)
-        if rem <= 0:
-            tail_node = None
-            rem = 0
-        if n_full * bs + rem <= 0:
+        raw = len(full) * bs + (tail[1] if tail else 0)
+        target = min(raw, len(tokens) - 1)
+        target -= target % max(1, align)
+        n_full = min(len(full), target // bs)
+        rem = target - n_full * bs
+        tail_node = None
+        if rem > 0:
+            # the boundary cuts into a matched block: COW its overlap
+            tail_node = full[n_full] if n_full < len(full) else tail[0]
+        if target <= 0:
             return 0
         blocks: List[int] = []
         for nd in full[:n_full]:
@@ -264,6 +271,15 @@ class PagedKVPool:
                 self._ref[tail_node.block] -= 1
             if dst is None:
                 tail_node, rem = None, 0
+                # the degraded whole-block hit must still respect the
+                # alignment contract: keep only the largest block count
+                # whose token span is an align multiple, rolling back
+                # the refs on dropped blocks (run_suffix asserts
+                # plen % align == 0 at admission)
+                while n_full and (n_full * bs) % max(1, align):
+                    n_full -= 1
+                    self._ref[full[n_full].block] -= 1
+                    blocks.pop()
                 if not blocks:
                     return 0
             else:

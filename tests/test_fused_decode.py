@@ -234,11 +234,18 @@ def test_bucketed_prefill_is_exact():
     assert exact.padded_tokens < bucketed.padded_tokens
 
 
-def test_bucketing_gated_off_state_carrying_stacks():
-    """SSM/hybrid conv state absorbs right pads and capacity MoE counts
-    slots over the padded row — those stacks keep exact grouping."""
-    for arch in ("mamba2-2.7b", "jamba-1.5-large-398b"):
+def test_bucketing_universal_with_exact_escape_hatch(monkeypatch):
+    """Every family takes the bucketed path by default (the forward is
+    pad-invariant by contract — there is no supports_bucketing gate
+    anymore); REPRO_PREFILL=exact is the one-release escape hatch back
+    to exact-length grouping, mirroring REPRO_DECODE=eager."""
+    for arch in ("mamba2-2.7b", "jamba-1.5-large-398b", "qwen2-moe-a2.7b",
+                 "granite-3-8b"):
         cfg, params = reduced_params(arch)
-        assert not PrefillEngine(cfg, params).supports_bucketing
+        assert PrefillEngine(cfg, params).bucket_prefill, arch
+        assert not hasattr(PrefillEngine(cfg, params), "supports_bucketing")
+    monkeypatch.setenv("REPRO_PREFILL", "exact")
     cfg, params = reduced_params("granite-3-8b")
-    assert PrefillEngine(cfg, params).supports_bucketing
+    assert not PrefillEngine(cfg, params).bucket_prefill
+    # explicit constructor choice still wins over the env
+    assert PrefillEngine(cfg, params, bucket_prefill=True).bucket_prefill

@@ -104,17 +104,67 @@ def test_hybrid_takes_skip_path(arch):
     assert wn.engine.compute_tokens == cn.engine.compute_tokens
 
 
-def test_capacity_moe_is_gated_off():
-    """Capacity dispatch drops tokens as a function of the whole batch,
-    so suffix-only prefill would not be batch-invariant: the default
-    capacity-dispatch MoE must bypass the index entirely."""
+def test_capacity_moe_joins_the_index_window_aligned():
+    """Capacity dispatch went window-local and row-length-independent
+    (PR 5): the capacity-MoE gate on the prefix index is lifted. Hits
+    must land on capacity-window boundaries — the engine advertises the
+    alignment and the pool's aligned acquire rounds hits down to it
+    (warm-vs-cold token parity for capacity MoE is pinned in
+    tests/test_bucketed_prefill.py)."""
     from repro.serving.engine import PrefillEngine
     cfg, params = reduced_params("qwen2-moe-a2.7b")
     assert cfg.moe.dispatch == "capacity"
-    assert not PrefillEngine(cfg, params).supports_prefix_reuse
+    eng = PrefillEngine(cfg, params)
+    assert eng.supports_prefix_reuse
+    assert eng.prefix_align == cfg.moe.capacity_window
     sorted_cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
                                                      dispatch="sorted"))
-    assert PrefillEngine(sorted_cfg, params).supports_prefix_reuse
+    eng_s = PrefillEngine(sorted_cfg, params)
+    assert eng_s.supports_prefix_reuse and eng_s.prefix_align == 1
+
+
+def test_aligned_acquire_rounds_down_to_window():
+    """A 9-token trie match under align=8 degrades to an 8-token hit
+    (whole-block + COW boundary respected); under align=16 it is a
+    clean miss with no refs taken."""
+    cfg, _ = reduced_params("granite-3-8b")
+    pool = PagedKVPool(cfg, num_blocks=16, block_size=4,
+                       enable_prefix_cache=True)
+    toks = list(range(9)) + [50, 51]
+    pool.alloc(0, len(toks))
+    pool.insert_prefix(0, toks)
+    assert pool.peek_prefix(toks + [7], align=8) == 8
+    assert pool.peek_prefix(toks + [7], align=16) == 0
+    got = pool.acquire_prefix(1, toks + [7], align=8)
+    assert got == 8 and len(pool.owned(1)) == 2
+    assert pool.invariant_ok()
+    assert pool.acquire_prefix(2, toks + [7], align=16) == 0
+    assert pool.owned(2) == [] and pool.invariant_ok()
+
+
+def test_cow_exhaustion_degrade_stays_aligned():
+    """When the COW tail cannot allocate, the degraded whole-block hit
+    must still land on an align boundary (rolling back refs on dropped
+    blocks) — run_suffix asserts the alignment at admission."""
+    cfg, _ = reduced_params("granite-3-8b")
+    pool = PagedKVPool(cfg, num_blocks=10, block_size=4,
+                       enable_prefix_cache=True)
+    toks = list(range(20))
+    pool.alloc(0, len(toks))                 # 5 blocks, rid 0 stays live
+    pool.insert_prefix(0, toks)
+    pool.alloc(1, 20)                        # exhaust the other 5 blocks
+    assert pool.free_blocks == 0
+    # target 18 -> align 6 -> 18; match gives 4 full blocks + rem 2 ->
+    # COW impossible -> degrade must drop to 12 (3 blocks), not 16
+    cached = pool.acquire_prefix(2, toks[:19] + [99], align=6)
+    assert cached == 12 and len(pool.owned(2)) == 3
+    assert cached % 6 == 0
+    assert pool.invariant_ok()
+    pool.release(2)
+    # align=32: nothing aligned fits under the 19-token limit -> clean
+    # miss, no refs taken
+    assert pool.acquire_prefix(3, toks[:19] + [99], align=32) == 0
+    assert pool.owned(3) == [] and pool.invariant_ok()
 
 
 def test_attn_free_bypasses_index():
