@@ -74,6 +74,65 @@ def _real_engine_rows() -> list:
     return rows
 
 
+def _ssm_state_rows() -> list:
+    """Cold-vs-warm prefill for the SSM/hybrid families (PR 6): warm
+    hits restore a recurrent-state snapshot next to the prefix KV, so
+    the measured section also surfaces the snapshot index counters
+    (hits, resident bytes, restores) and the transfer scheduler's
+    trailing state segments."""
+    import jax
+    from repro.models.params import init_params
+    from repro.serving.cluster import ServeRequest
+    from repro.serving.frontend import ClusterFrontend
+
+    rows: list[Row] = []
+    for arch, tag in (("mamba2-2.7b", "mamba2"),
+                      ("jamba-1.5-large-398b", "jamba")):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        # prefix on a snapshot-stride boundary (lcm of SSD chunk, pool
+        # block, capacity window) so every follow-up is a clean hit
+        plen, slen = 96, 16
+        prefix = list(map(int, rng.integers(0, cfg.vocab_size, plen)))
+        prompts = [prefix + list(map(int, rng.integers(
+            0, cfg.vocab_size, slen))) for _ in range(5)]
+
+        def serve(prefix_cache: bool):
+            fe = ClusterFrontend(cfg, topology={"default": (1, 1)},
+                                 params=params, prefix_cache=prefix_cache,
+                                 prefill_kwargs={"num_blocks": 64},
+                                 decode_kwargs={"num_blocks": 64})
+            for i, toks in enumerate(prompts):
+                req = ServeRequest(rid=i, tokens=list(toks),
+                                   max_new_tokens=2)
+                fe.run([req], max_ticks=100)
+            g = fe.groups["default"]
+            return list(g.prefill_batch_s), g
+
+        cold_s, _ = serve(False)
+        warm_s, g = serve(True)
+        cold = float(np.mean(cold_s[2:]))
+        warm = float(np.mean(warm_s[2:]))
+        pf = g.prefix_stats()
+        ts = g.transfer_stats()
+        rows.append((f"prefix/{tag}_cold_prefill_ms", cold * 1e3,
+                     f"prompt={plen + slen}tok"))
+        rows.append((f"prefix/{tag}_warm_prefill_ms", warm * 1e3,
+                     f"suffix_only={slen}tok+state_restore"))
+        rows.append((f"prefix/{tag}_snap_hit_rate",
+                     100.0 * pf["snap_hits"] /
+                     max(pf["snap_hits"] + pf["snap_misses"], 1),
+                     f"restores={int(pf['state_restores'])}"))
+        rows.append((f"prefix/{tag}_snap_resident_kb",
+                     pf["snap_bytes"] / 1024.0,
+                     f"stores={int(pf['snap_stores'])}"))
+        rows.append((f"prefix/{tag}_state_segments",
+                     ts["state_segments"],
+                     f"payload={int(ts['state_payload_bytes'])}B"))
+    return rows
+
+
 def run() -> list:
     rows: list[Row] = []
     prof = profile_for(get_config("pangu-38b"))
@@ -111,4 +170,6 @@ def run() -> list:
 
     # real engine: cold vs warm suffix-only prefill (serving data path)
     rows.extend(_real_engine_rows())
+    # SSM/hybrid families: warm hits restore recurrent-state snapshots
+    rows.extend(_ssm_state_rows())
     return rows

@@ -26,19 +26,26 @@ class PrefixEntry:
     tokens: int
     nbytes: int
     hits: int = 0
+    # recurrent-state snapshot bytes riding with the entry (SSM/hybrid
+    # scenarios): budgeted, inserted, and evicted in lockstep with the
+    # KV bytes — the placement-accounting twin of PagedKVPool._snaps
+    state_nbytes: int = 0
 
 
 class PrefixCache:
     """LRU prefix-KVCache placement under an HBM byte budget."""
 
-    def __init__(self, budget_bytes: int, kv_bytes_per_token: int):
+    def __init__(self, budget_bytes: int, kv_bytes_per_token: int,
+                 state_bytes_per_prefix: int = 0):
         self.budget = int(budget_bytes)
         self.kv_bpt = int(kv_bytes_per_token)
+        self.state_bpp = int(state_bytes_per_prefix)
         self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
         self.used = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.state_bytes = 0        # resident snapshot bytes (lockstep)
 
     # ------------------------------------------------------------ queries
     def lookup(self, prefix_id: str, prefix_len: int) -> int:
@@ -60,27 +67,34 @@ class PrefixCache:
     # ------------------------------------------------------------ updates
     def insert(self, prefix_id: str, prefix_len: int) -> bool:
         """Cache a prefix after computing it; evicts LRU entries as needed.
-        Returns False if it can never fit."""
-        nbytes = prefix_len * self.kv_bpt
+        Returns False if it can never fit. A snapshot payload
+        (``state_bytes_per_prefix``) is budgeted with the KV bytes and
+        dies with the entry — it never outlives its prefix."""
+        nbytes = prefix_len * self.kv_bpt + self.state_bpp
         if nbytes > self.budget:
             return False
         old = self._entries.pop(prefix_id, None)
         if old is not None:
             self.used -= old.nbytes
+            self.state_bytes -= old.state_nbytes
         while self.used + nbytes > self.budget and self._entries:
             _, ev = self._entries.popitem(last=False)
             self.used -= ev.nbytes
+            self.state_bytes -= ev.state_nbytes
             self.evictions += 1
         e = PrefixEntry(prefix_id, prefix_len, nbytes,
-                        hits=old.hits if old else 0)
+                        hits=old.hits if old else 0,
+                        state_nbytes=self.state_bpp)
         self._entries[prefix_id] = e
         self.used += nbytes
+        self.state_bytes += self.state_bpp
         return True
 
     def drop(self, prefix_id: str):
         e = self._entries.pop(prefix_id, None)
         if e is not None:
             self.used -= e.nbytes
+            self.state_bytes -= e.state_nbytes
 
     def __contains__(self, prefix_id: str) -> bool:
         return prefix_id in self._entries
@@ -90,6 +104,8 @@ class PrefixCache:
 
     def invariant_ok(self) -> bool:
         return (self.used == sum(e.nbytes for e in self._entries.values())
+                and self.state_bytes == sum(e.state_nbytes
+                                            for e in self._entries.values())
                 and self.used <= self.budget)
 
 

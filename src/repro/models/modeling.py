@@ -570,12 +570,17 @@ def _causal_conv1d(x: jax.Array, w: jax.Array,
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
              C: jax.Array, chunk: int,
-             init_state: Optional[jax.Array] = None
-             ) -> Tuple[jax.Array, jax.Array]:
+             init_state: Optional[jax.Array] = None,
+             return_chunk_states: bool = False):
     """Chunked SSD (Mamba2, arXiv:2405.21060 listing 1), n_groups == 1.
 
     x: (b, s, nh, hd); dt: (b, s, nh); A: (nh,); B, C: (b, s, n).
-    Returns y (b, s, nh, hd) and final state (b, nh, n, hd).
+    Returns y (b, s, nh, hd) and final state (b, nh, n, hd); with
+    ``return_chunk_states`` also the per-chunk carried states
+    (nc, b, nh, n, hd) — chunk_states[m] is the state after chunk m,
+    i.e. bitwise the final state of a run truncated at (m+1)*chunk
+    tokens (the chunk partition is config-fixed, so the carries ARE
+    exact boundary snapshots; see mamba_sublayer_seq snap_stride).
 
     The sequence is right-padded up to a whole number of chunks with
     dt == 0 rows: a zero-dt token neither decays nor updates the carried
@@ -631,10 +636,15 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
         dS = jnp.einsum("bkn,bkh,bkhp->bhnp", Bc, w_k, xc,
                         preferred_element_type=jnp.float32)
         S = S * jnp.exp(total)[:, :, None, None] + dS
-        return S, y.astype(x.dtype)
+        return S, (y.astype(x.dtype), S) if return_chunk_states \
+            else y.astype(x.dtype)
 
     S, ys = lax.scan(body, init_state, (xs, dts, Bs, Cs))
+    if return_chunk_states:
+        ys, chunk_states = ys
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, nh, hd)[:, :s]
+    if return_chunk_states:
+        return y, S, chunk_states
     return y, S
 
 
@@ -653,7 +663,9 @@ def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 
 def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
                        return_state: bool = False,
-                       valid_len: Optional[jax.Array] = None):
+                       valid_len: Optional[jax.Array] = None,
+                       init: Optional[Tree] = None,
+                       snap_stride: int = 0):
     """``valid_len`` (b,) marks the real (un-padded) token count per row
     of a right-pad-bucketed batch. Padded tokens are masked out of the
     recurrence by zeroing their dt AFTER the softplus — a zero-dt token
@@ -662,7 +674,19 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
     valid boundary, not the padded end. The causal conv itself is
     right-pad-inert (outputs at valid positions never read later
     positions), so the forward at valid positions and the final
-    recurrent state are identical to the exact-length run."""
+    recurrent state are identical to the exact-length run.
+
+    ``init`` restores a boundary snapshot {"conv_x","conv_b","conv_c"
+    (b,c,k-1), "state" (b,nh,n,hd)}: the conv windows are seeded with
+    the last k-1 pre-conv inputs of the cached prefix and the SSD scan
+    starts from the carried state, so a suffix-only run continues the
+    recurrence bitwise (the restore boundary is a multiple of the SSD
+    chunk, keeping the suffix chunk partition aligned with the cold
+    run's). ``snap_stride`` > 0 (static; a multiple of the SSD chunk)
+    additionally emits snapshots at every stride boundary t of THIS
+    run: "snap_state" (nb,b,nh,n,hd) from the per-chunk scan carries
+    and "snap_conv_{x,b,c}" (nb,b,c,k-1) static input slices — bitwise
+    the state/conv tail a run truncated at t would hand to decode."""
     s_cfg = cfg.ssm_cfg
     d_in = s_cfg.expand * cfg.d_model
     nh = d_in // s_cfg.head_dim
@@ -673,9 +697,10 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
     bin_ = x @ p["w_b"]
     cin = x @ p["w_c"]
     dt = x @ p["w_dt"] + p["dt_bias"]
-    xc = jax.nn.silu(_causal_conv1d(xin, p["conv_x"]))
-    bc = jax.nn.silu(_causal_conv1d(bin_, p["conv_b"]))
-    cc = jax.nn.silu(_causal_conv1d(cin, p["conv_c"]))
+    ini = init or {}
+    xc = jax.nn.silu(_causal_conv1d(xin, p["conv_x"], ini.get("conv_x")))
+    bc = jax.nn.silu(_causal_conv1d(bin_, p["conv_b"], ini.get("conv_b")))
+    cc = jax.nn.silu(_causal_conv1d(cin, p["conv_c"], ini.get("conv_c")))
     dt = jax.nn.softplus(dt.astype(jnp.float32))
     if valid_len is not None:
         vmask = jnp.arange(s)[None, :] < valid_len[:, None]    # (b, s)
@@ -683,7 +708,14 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
     A = -jnp.exp(p["a_log"].astype(jnp.float32))
     x4 = constrain(_split_heads(xc, nh), ("batch", None, "q_heads_act", None))
     dt = constrain(dt, ("batch", None, "q_heads_act"))
-    y4, state = ssd_scan(x4, dt, A, bc, cc, s_cfg.chunk)
+    if snap_stride:
+        assert snap_stride % s_cfg.chunk == 0, (snap_stride, s_cfg.chunk)
+        y4, state, chunk_states = ssd_scan(
+            x4, dt, A, bc, cc, s_cfg.chunk, init_state=ini.get("state"),
+            return_chunk_states=True)
+    else:
+        y4, state = ssd_scan(x4, dt, A, bc, cc, s_cfg.chunk,
+                             init_state=ini.get("state"))
     y4 = y4 + x4 * p["d_skip"][:, None].astype(x4.dtype)
     y = _merge_heads(y4)
     y = rmsnorm(y * jax.nn.silu(z), p["norm_g"], cfg.norm_eps)
@@ -691,7 +723,18 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
     if return_state:
         k = s_cfg.conv_kernel
 
-        def tail(t):                    # (b, s, c) -> (b, c, k-1)
+        def tail(t, ikey):              # (b, s, c) -> (b, c, k-1)
+            if init is not None:
+                # the conv window may span the restore boundary when the
+                # suffix is shorter than k-1: gather from the snapshot
+                # tail ++ this run's inputs (all positions real)
+                ext = jnp.concatenate(
+                    [jnp.swapaxes(ini[ikey], 1, 2), t], axis=1)
+                vl = valid_len[:, None] if valid_len is not None \
+                    else jnp.full((t.shape[0], 1), s, jnp.int32)
+                idx = vl + jnp.arange(k - 1)[None]
+                g = jnp.take_along_axis(ext, idx[..., None], axis=1)
+                return jnp.swapaxes(g, 1, 2)
             if valid_len is None:
                 return jnp.swapaxes(t[:, -(k - 1):, :], 1, 2)
             # last k-1 VALID inputs per row (zeros left of the sequence
@@ -704,11 +747,38 @@ def mamba_sublayer_seq(p: Tree, h: jax.Array, cfg: ModelConfig, *,
             return jnp.swapaxes(g, 1, 2)
 
         tails = {
-            "conv_x": tail(xin),
-            "conv_b": tail(bin_),
-            "conv_c": tail(cin),
+            "conv_x": tail(xin, "conv_x"),
+            "conv_b": tail(bin_, "conv_b"),
+            "conv_c": tail(cin, "conv_c"),
             "state": state,
         }
+        if snap_stride:
+            # boundary j (1-based) sits after j*stride tokens of this
+            # run: SSD state = carry after chunk j*stride/chunk - 1,
+            # conv tails = the k-1 inputs just before the boundary
+            # (stride >= chunk > k-1, so the slices are static and
+            # in-range). Boundaries past a row's valid_len hold frozen
+            # (zero-dt) state and pad-garbage conv rows — the engine
+            # stores only boundaries <= prompt_len.
+            nb = s // snap_stride
+            bidx = [(j + 1) * snap_stride for j in range(nb)]
+            if nb:
+                tails["snap_state"] = jnp.stack(
+                    [chunk_states[t // s_cfg.chunk - 1] for t in bidx])
+                for key, t in (("snap_conv_x", xin), ("snap_conv_b", bin_),
+                               ("snap_conv_c", cin)):
+                    tails[key] = jnp.stack(
+                        [jnp.swapaxes(t[:, b - (k - 1):b], 1, 2)
+                         for b in bidx])
+            else:
+                b = h.shape[0]
+                n = p["w_b"].shape[1]
+                tails["snap_state"] = jnp.zeros(
+                    (0, b, nh, n, s_cfg.head_dim), jnp.float32)
+                for key, src in (("snap_conv_x", xin), ("snap_conv_b", bin_),
+                                 ("snap_conv_c", cin)):
+                    tails[key] = jnp.zeros(
+                        (0, b, src.shape[-1], k - 1), src.dtype)
         return out, tails
     return out
 
@@ -773,18 +843,24 @@ def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
               collect_cache: bool,
               prefix: Optional[Tree] = None,
               prefix_len=None,
-              valid_len: Optional[jax.Array] = None
+              valid_len: Optional[jax.Array] = None,
+              ssm_state: Optional[Tree] = None,
+              snap_stride: int = 0
               ) -> Tuple[jax.Array, jax.Array, Tree]:
     """Apply one repeating block (period sublayers). Returns (h, aux, cache).
 
     ``prefix`` maps "sub{i}" -> {"k", "v"} reused prefix KVCaches
     (b, P, kv_dim) for this block's attention sublayers, right-padded to
     the static prefix bucket P with only the first ``prefix_len``
-    (traced) rows real (prefix reuse is gated upstream to
-    attention-only stacks). ``valid_len`` (b,) marks real suffix tokens
-    of a right-pad-bucketed batch — the pad-invariance contract every
-    sublayer honors (masked attention queries, zero-dt SSD recurrence,
-    null-slot MoE capacity)."""
+    (traced) rows real; mamba sublayers carry no entry (or an empty
+    one) — their prefix restore rides in ``ssm_state``, which maps
+    "sub{i}" -> boundary snapshot {"conv_x","conv_b","conv_c","state"}
+    seeding the sublayer's conv windows and SSD scan (see
+    mamba_sublayer_seq). ``snap_stride`` > 0 makes mamba sublayers also
+    EMIT snapshots at stride boundaries into the cache. ``valid_len``
+    (b,) marks real suffix tokens of a right-pad-bucketed batch — the
+    pad-invariance contract every sublayer honors (masked attention
+    queries, zero-dt SSD recurrence, null-slot MoE capacity)."""
     kinds = cfg.layer_kinds()
     moe_mask = cfg.moe_layer_mask()
     period = block_period(cfg)
@@ -797,8 +873,9 @@ def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
         if kinds[i] == ATTN:
             pfx = None
             if prefix is not None:
-                pc = prefix[f"sub{i}"]
-                pfx = (pc["k"], pc["v"])
+                pc = prefix.get(f"sub{i}")
+                if pc:
+                    pfx = (pc["k"], pc["v"])
             if collect_cache:
                 h, (k, v) = attn_sublayer_seq(
                     p, h, cfg, causal=causal, positions=positions,
@@ -813,12 +890,20 @@ def block_seq(cfg: ModelConfig, blk_params: Tree, h: jax.Array, *,
                                       prefix_len=prefix_len,
                                       q_valid=valid_len)
         else:
+            ini = None
+            if ssm_state is not None:
+                si = ssm_state.get(f"sub{i}")
+                if si:
+                    ini = si
             if collect_cache:
                 h, tails = mamba_sublayer_seq(p, h, cfg, return_state=True,
-                                              valid_len=valid_len)
+                                              valid_len=valid_len,
+                                              init=ini,
+                                              snap_stride=snap_stride)
                 c.update(tails)
             else:
-                h = mamba_sublayer_seq(p, h, cfg, valid_len=valid_len)
+                h = mamba_sublayer_seq(p, h, cfg, valid_len=valid_len,
+                                       init=ini)
         if enc_out is not None:
             if collect_cache:
                 h, (xk, xv) = cross_attn_seq(p, h, enc_out, cfg, return_kv=True)
@@ -935,7 +1020,9 @@ def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
                 collect_cache: bool, remat: bool,
                 window: Optional[int] = None,
                 prefix: Optional[Tree] = None, prefix_len=0,
-                valid_len: Optional[jax.Array] = None
+                valid_len: Optional[jax.Array] = None,
+                ssm_init: Optional[Tree] = None,
+                snap_stride: int = 0
                 ) -> Tuple[jax.Array, jax.Array, Optional[Tree]]:
     """Shared train/prefill path. Returns (hidden (b,s,d), aux, cache|None).
 
@@ -946,7 +1033,13 @@ def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
     padded prefix rows are masked out of attention) and every attention
     sublayer attends over the reused prefix KVCache ++ the fresh suffix
     keys (suffix-only prefill, paper §2.2.1 prefix reuse on the real
-    path). ``valid_len`` (b,) is the pad-invariance mask for right-pad
+    path). ``ssm_init`` is the recurrent-state half of a warm restore —
+    per-block "sub{i}" -> boundary snapshot, stacked like
+    params["blocks"] — seeding each mamba sublayer's conv windows and
+    SSD state so SSM/hybrid stacks continue the recurrence bitwise from
+    the snapshot boundary; ``snap_stride`` > 0 emits such snapshots
+    into the cache at stride boundaries (see mamba_sublayer_seq).
+    ``valid_len`` (b,) is the pad-invariance mask for right-pad
     length-bucketed batches: tokens at row index >= valid_len[b] attend
     to nothing, leave the SSD recurrence untouched, and take no MoE
     capacity (the shared jitted prefill serves EVERY family from
@@ -959,22 +1052,29 @@ def forward_seq(cfg: ModelConfig, params: Tree, batch: Tree, *,
         enc_out = encoder_forward(cfg, params, batch["frames"])
 
     h = constrain(h, ("batch", "seq_act", None))
+    extras = {}
+    if prefix is not None:
+        extras["prefix"] = prefix
+    if ssm_init is not None:
+        extras["ssm"] = ssm_init
 
     def body(carry, xs):
         hh, aux = carry
-        blkp, pfx = xs if prefix is not None else (xs, None)
+        blkp, ex = xs if extras else (xs, {})
         hh, a, cache = block_seq(cfg, blkp, hh, positions=positions,
                                  causal=True, window=window, enc_out=enc_out,
-                                 collect_cache=collect_cache, prefix=pfx,
-                                 prefix_len=prefix_len if prefix is not None
-                                 else None,
-                                 valid_len=valid_len)
+                                 collect_cache=collect_cache,
+                                 prefix=ex.get("prefix"),
+                                 prefix_len=prefix_len if extras else None,
+                                 valid_len=valid_len,
+                                 ssm_state=ex.get("ssm"),
+                                 snap_stride=snap_stride)
         hh = constrain(hh, ("batch", "seq_act", None))
         return (hh, aux + a), cache
 
     if remat:
         body = jax.checkpoint(body)
-    xs = params["blocks"] if prefix is None else (params["blocks"], prefix)
+    xs = params["blocks"] if not extras else (params["blocks"], extras)
     (h, aux), caches = lax.scan(
         body, (h, jnp.zeros((), jnp.float32)), xs,
     )
@@ -1031,7 +1131,9 @@ def forward_train(cfg: ModelConfig, params: Tree, batch: Tree,
 def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
                     window: Optional[int] = None,
                     last_index: Optional[jax.Array] = None,
-                    prefix: Optional[Tree] = None, prefix_len=0
+                    prefix: Optional[Tree] = None, prefix_len=0,
+                    ssm_init: Optional[Tree] = None,
+                    snap_stride: int = 0
                     ) -> Tuple[jax.Array, Tree]:
     """Returns (first generated token (b,), decode cache).
 
@@ -1040,17 +1142,20 @@ def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
     pad-invariance mask: rows are treated as valid only up to it, so a
     length-bucketed batch is exact for every family (masked attention
     queries, zero-dt SSD recurrence, null-slot MoE capacity — see
-    forward_seq). With `prefix`/`prefix_len` (see forward_seq) the batch
-    is the uncached suffix only — `prefix_len` may be a traced scalar
-    under a bucket-padded prefix — and the returned cache covers just
-    those suffix tokens; the caller stitches prefix ++ suffix back
-    together."""
+    forward_seq). With `prefix`/`prefix_len`/`ssm_init` (see
+    forward_seq) the batch is the uncached suffix only — `prefix_len`
+    may be a traced scalar under a bucket-padded prefix — and the
+    returned cache covers just those suffix tokens; the caller stitches
+    prefix ++ suffix back together. `snap_stride` (static, a multiple
+    of the SSD chunk) makes mamba sublayers emit boundary snapshots
+    into the cache for the prefix-reuse store."""
     valid_len = None if last_index is None \
         else last_index.astype(jnp.int32) + 1
     h, _, caches = forward_seq(cfg, params, batch, collect_cache=True,
                                remat=False, window=window,
                                prefix=prefix, prefix_len=prefix_len,
-                               valid_len=valid_len)
+                               valid_len=valid_len, ssm_init=ssm_init,
+                               snap_stride=snap_stride)
     if last_index is None:
         h_last = h[:, -1, :]
     else:

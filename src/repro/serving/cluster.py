@@ -13,6 +13,7 @@ discrete-event simulator's job (repro.core.cluster_sim).
 from __future__ import annotations
 
 import hashlib
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -60,14 +61,25 @@ class PrefillNode:
         self.iid = iid
         self.engine = PrefillEngine(cfg, params,
                                     bucket_prefill=bucket_prefill)
-        # prefix reuse needs a pure-attention stack (SSM/hybrid state is
-        # not restorable from a KV prefix; attn-free has no KV at all) —
-        # incompatible archs transparently bypass the index. Capacity
-        # MoE participates since capacity went window-local; its hits
-        # are rounded down to capacity-window boundaries (prefix_align)
+        # every family participates in the prefix index now. Capacity
+        # MoE hits are rounded down to capacity-window boundaries;
+        # SSM/hybrid stacks cache recurrent-state snapshots alongside
+        # their KV blocks and hit only at snapshot boundaries — the
+        # snapshot stride is the lcm of the engine alignment (SSD
+        # chunk / capacity window) and the pool block size, so every
+        # boundary ends exactly at a whole cached block
         self.prefix_cache = bool(prefix_cache) \
             and self.engine.supports_prefix_reuse
+        # snapshot emission/restore rides the reuse path: when reuse is
+        # off (disabled, or gated off by REPRO_PREFILL=exact — see
+        # PrefillEngine.supports_prefix_reuse) cold runs skip it
+        self.needs_state = self.prefix_cache \
+            and self.engine.requires_state_restore
         self.prefix_align = self.engine.prefix_align
+        self.snap_stride = 0
+        if self.needs_state:
+            self.prefix_align = math.lcm(self.prefix_align, block_size)
+            self.snap_stride = self.prefix_align
         self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
                                 block_size=block_size,
                                 enable_prefix_cache=self.prefix_cache)
@@ -99,7 +111,8 @@ class PrefillNode:
             return 0
         return self.pool.peek_prefix(req.tokens,
                                      namespace=_frames_ns(req),
-                                     align=self.prefix_align)
+                                     align=self.prefix_align,
+                                     require_state=self.needs_state)
 
     def prefix_stats(self) -> Dict[str, float]:
         return {
@@ -109,6 +122,11 @@ class PrefillNode:
             "cow_copies": self.pool.cow_copies,
             "compute_tokens": self.engine.compute_tokens,
             "reused_tokens": self.engine.reused_tokens,
+            "snap_hits": self.pool.snap_hits,
+            "snap_misses": self.pool.snap_misses,
+            "snap_stores": self.pool.snap_stores,
+            "snap_bytes": self.pool.snap_bytes,
+            "state_restores": self.engine.state_restores,
         }
 
     def run_batch(self, collect_layers: bool = False
@@ -125,7 +143,8 @@ class PrefillNode:
             if self.prefix_cache:
                 cached = self.pool.acquire_prefix(
                     req.rid, req.tokens, namespace=_frames_ns(req),
-                    align=self.prefix_align)
+                    align=self.prefix_align,
+                    require_state=self.needs_state)
             (warm.append((req, cached)) if cached else cold.append(req))
 
         def _stash_for(rid):
@@ -142,30 +161,45 @@ class PrefillNode:
                 def on_layer(i, li, k_li, v_li, frac):
                     _stash_for(cold[i].rid)(i, li, k_li, v_li, frac)
             outs = self.engine.run([r.tokens for r in cold], frames=frames,
-                                   on_layer=on_layer)
+                                   on_layer=on_layer,
+                                   snap_stride=self.snap_stride)
             for req, out in zip(cold, outs):
                 if out.k is not None:
                     blocks = self.pool.alloc(req.rid, out.prompt_len)
                     self.pool.write_prefill(blocks, out.k, out.v)
-                    if self.prefix_cache:
-                        self.pool.insert_prefix(
-                            req.rid, req.tokens,
-                            namespace=_frames_ns(req))
+                elif self.prefix_cache and self.needs_state:
+                    # attn-free: zero-width blocks are trie key-holders
+                    # for the boundary snapshots
+                    self.pool.alloc(req.rid, out.prompt_len)
+                if self.prefix_cache and self.pool.owned(req.rid):
+                    self.pool.insert_prefix(
+                        req.rid, req.tokens,
+                        namespace=_frames_ns(req),
+                        states=out.snapshots)
                 ready.append((req, out))
         for req, cached in warm:
-            # hit: gather the cached prefix KV (Pallas kv_gather), run the
+            # hit: gather the cached prefix KV (Pallas kv_gather) and —
+            # for SSM/hybrid — the boundary state snapshot, run the
             # forward over only the uncached suffix, write the suffix KV
             # into freshly allocated blocks (shared blocks stay read-only)
             pre_blocks = self.pool.owned(req.rid)
-            buf = self.pool.gather_contiguous(pre_blocks)[:, :cached]
+            buf = None
+            if self.pool.attn_layers:
+                buf = self.pool.gather_contiguous(pre_blocks)[:, :cached]
+            state = self.pool.snapshot_for(req.rid, cached) \
+                if self.needs_state else None
             out = self.engine.run_suffix(
                 req.tokens[cached:], buf, frames=req.frames,
-                on_layer=_stash_for(req.rid) if collect_layers else None)
+                on_layer=_stash_for(req.rid) if collect_layers else None,
+                state=state, prefix_len=cached,
+                snap_stride=self.snap_stride)
             self.pool.alloc_to(req.rid, out.prompt_len)
-            self.pool.write_tokens(self.pool.owned(req.rid), cached,
-                                   out.k[:, cached:], out.v[:, cached:])
+            if out.k is not None:
+                self.pool.write_tokens(self.pool.owned(req.rid), cached,
+                                       out.k[:, cached:], out.v[:, cached:])
             self.pool.insert_prefix(req.rid, req.tokens,
-                                    namespace=_frames_ns(req))
+                                    namespace=_frames_ns(req),
+                                    states=out.snapshots)
             ready.append((req, out))
         order = {id(r): i for i, r in enumerate(batch)}
         ready.sort(key=lambda pair: order[id(pair[0])])
@@ -215,7 +249,9 @@ class DecodeNode:
             else:
                 xfer.transfer_block_fixed(src_pool, src_blocks, self.pool,
                                           dst_blocks[:n])
-            src_pool.release(req.rid)
+        # attn-free requests may still hold prefix-index key blocks on
+        # the source pool (snapshot holders): always release
+        src_pool.release(req.rid)
         self.finish_admit(req, out)
 
     def finish_admit(self, req: ServeRequest, out: PrefillOutput):

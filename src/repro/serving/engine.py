@@ -31,6 +31,7 @@ engines run as fast as the hardware allows):
 """
 from __future__ import annotations
 
+import math
 import os
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -68,7 +69,7 @@ PREFILL_BUCKET_MIN = 16
 # prefix-reuse admissions retrace per (prefix bucket, suffix bucket) —
 # never per distinct prefix length.
 _jit_forward_prefill = jax.jit(
-    forward_prefill, static_argnames=("cfg", "window"))
+    forward_prefill, static_argnames=("cfg", "window", "snap_stride"))
 
 
 def prefill_compile_count() -> int:
@@ -104,6 +105,9 @@ class PrefillOutput:
     mamba_state: Optional[Tree]      # per (blk,sub): conv/state tensors
     prompt_len: int
     cross: Optional[Tree] = None     # enc-dec: (blk,sub) -> (xk, xv)
+    # recurrent-state snapshots for the prefix store: absolute token
+    # boundary -> per-(blk,sub) {"conv_x","conv_b","conv_c","state"}
+    snapshots: Optional[Dict[int, Tree]] = None
 
 
 class PrefillEngine:
@@ -150,20 +154,25 @@ class PrefillEngine:
         self.padded_tokens = 0       # bucket-padding tokens on top
         self.reused_tokens = 0       # tokens served from a prefix hit
         self.prefix_prefills = 0     # suffix-only prefills executed
+        self.state_restores = 0      # warm runs seeded from a snapshot
         self.prefill_batches = 0     # jitted batch launches
         self.bucket_hits = 0         # launches on an already-seen shape
         self._shapes_seen: set = set()
 
     def _prefill(self, batch: Tree, *, last_index: jax.Array,
-                 prefix: Optional[Tree] = None, prefix_len: int = 0):
+                 prefix: Optional[Tree] = None, prefix_len: int = 0,
+                 ssm_init: Optional[Tree] = None, snap_stride: int = 0):
         if self.jit_prefill:
             return _jit_forward_prefill(self.cfg, self.params, batch,
                                         last_index=last_index,
                                         prefix=prefix,
-                                        prefix_len=prefix_len)
+                                        prefix_len=prefix_len,
+                                        ssm_init=ssm_init,
+                                        snap_stride=snap_stride)
         return forward_prefill(self.cfg, self.params, batch,
                                last_index=last_index, prefix=prefix,
-                               prefix_len=prefix_len)
+                               prefix_len=prefix_len, ssm_init=ssm_init,
+                               snap_stride=snap_stride)
 
     def layer_fractions(self) -> Tuple[float, ...]:
         """Network-depth completion fraction of each attention layer, in
@@ -182,15 +191,35 @@ class PrefillEngine:
 
     @property
     def supports_prefix_reuse(self) -> bool:
-        """Prefix KV reuse needs a pure-attention stack: SSM/hybrid
-        layers carry recurrent state that a KV prefix cannot restore, and
-        attn-free stacks have no KV to reuse. Encoder-decoder is fine
-        (the encoder reruns; only decoder self-attn KV is reused).
+        """Every family reuses prefixes now. Pure-attention stacks reuse
+        the KV prefix alone; SSM/hybrid stacks additionally restore a
+        recurrent-state snapshot cached at the reuse boundary (see
+        ``requires_state_restore`` — the pool stores snapshots in
+        lockstep with the KV blocks). Encoder-decoder is fine (the
+        encoder reruns; only decoder self-attn KV is reused).
         Capacity-dispatch MoE is prefix-transparent since capacity went
         window-local and row-length-independent — its hits only need the
         prefix length aligned to the capacity window (``prefix_align``,
-        enforced by the pool's aligned acquire)."""
-        return bool(self._attn_order) and not self._mamba_order
+        enforced by the pool's aligned acquire).
+
+        SSM/hybrid reuse is gated on the BUCKETED prefill path: the
+        bit-identical state contract needs geometry control — a
+        tiny exact-length suffix run (fewer rows than a vector tile)
+        fuses/vectorizes differently and wobbles the SSD state by ulps,
+        and padding it is not an option for hybrids because the warm
+        attention must occupy exactly the cold run's padded key
+        geometry. Under ``REPRO_PREFILL=exact`` these families simply
+        serve cold, as they did before snapshots existed."""
+        if self._mamba_order and not self.bucket_prefill:
+            return False
+        return bool(self._attn_order) or bool(self._mamba_order)
+
+    @property
+    def requires_state_restore(self) -> bool:
+        """SSM/hybrid stacks: a warm hit must restore a recurrent-state
+        snapshot (conv tails + SSD state) alongside any prefix KV — the
+        pool only reports hits at boundaries that hold one."""
+        return bool(self._mamba_order)
 
     @property
     def prefix_align(self) -> int:
@@ -198,12 +227,19 @@ class PrefillEngine:
         counts expert slots in fixed windows of cfg.moe.capacity_window
         tokens: a prefix cut at a window boundary guarantees the suffix
         run sees exactly the windows a full run would give its suffix
-        tokens (no capacity competition across the reuse boundary)."""
+        tokens (no capacity competition across the reuse boundary).
+        Mamba layers need the cut on an SSD chunk boundary: the per-chunk
+        scan carry is bitwise the state of a run truncated there, and a
+        chunk-aligned restore keeps the suffix chunk partition identical
+        to the cold run's. Hybrid stacks take the lcm."""
+        a = 1
         m = self.cfg.moe
         if m is not None and m.dispatch == "capacity" \
                 and any(self.cfg.moe_layer_mask()):
-            return m.capacity_window
-        return 1
+            a = m.capacity_window
+        if self._mamba_order:
+            a = math.lcm(a, self.cfg.ssm_cfg.chunk)
+        return a
 
     def _bucket_len(self, n: int) -> int:
         b = PREFILL_BUCKET_MIN
@@ -220,7 +256,8 @@ class PrefillEngine:
 
     def run(self, token_lists: Sequence[Sequence[int]],
             frames: Optional[Sequence] = None,
-            on_layer: Optional[OnLayer] = None) -> List[PrefillOutput]:
+            on_layer: Optional[OnLayer] = None,
+            snap_stride: int = 0) -> List[PrefillOutput]:
         """Ragged batches are grouped into padded power-of-two length
         buckets for EVERY family (retrace count becomes O(num_buckets)
         under tidal ragged traffic): right padding is exact by the
@@ -231,7 +268,13 @@ class PrefillEngine:
 
         ``on_layer`` enables the layer-streaming mode: each request's
         per-layer (k, v) is yielded in network order (see OnLayer) for
-        per-layer-triggered transfer."""
+        per-layer-triggered transfer.
+
+        ``snap_stride`` > 0 (static; lcm of the pool block size and the
+        SSD chunk, supplied by the serving node) makes mamba sublayers
+        emit recurrent-state snapshots at stride boundaries; each
+        output's ``snapshots`` maps boundary -> per-layer state for the
+        prefix store."""
         by_len: Dict[int, List[int]] = {}
         for i, t in enumerate(token_lists):
             key = self._bucket_len(len(t)) if self.bucket_prefill else len(t)
@@ -241,7 +284,8 @@ class PrefillEngine:
             sub = self._run_equal(
                 [token_lists[i] for i in idxs],
                 [frames[i] for i in idxs] if frames is not None else None,
-                pad_to=ln if self.bucket_prefill else None)
+                pad_to=ln if self.bucket_prefill else None,
+                snap_stride=snap_stride)
             for i, o in zip(idxs, sub):
                 outs[i] = o
                 self._emit_layers(on_layer, i, o.k, o.v)
@@ -249,9 +293,12 @@ class PrefillEngine:
 
     def _run_equal(self, token_lists: Sequence[Sequence[int]],
                    frames: Optional[Sequence] = None,
-                   pad_to: Optional[int] = None
+                   pad_to: Optional[int] = None,
+                   snap_stride: int = 0
                    ) -> List[PrefillOutput]:
         cfg = self.cfg
+        if not self._mamba_order:
+            snap_stride = 0          # snapshots are an SSM-only artifact
         b = len(token_lists)
         lens = [len(t) for t in token_lists]
         s = pad_to if pad_to is not None else max(lens)
@@ -262,12 +309,13 @@ class PrefillEngine:
         batch = {"tokens": jnp.asarray(toks)}
         self.compute_tokens += sum(lens)
         self.padded_tokens += b * s - sum(lens)
-        self._count_launch((b, s))
+        self._count_launch((b, s, snap_stride))
         if cfg.is_encoder_decoder:
             assert frames is not None, "enc-dec prefill needs frames"
             batch["frames"] = jnp.stack([jnp.asarray(f) for f in frames])
         first, cache = self._prefill(
-            batch, last_index=jnp.asarray([ln - 1 for ln in lens]))
+            batch, last_index=jnp.asarray([ln - 1 for ln in lens]),
+            snap_stride=snap_stride)
         outs: List[PrefillOutput] = []
         layers = cache["layers"]
         for i, ln in enumerate(lens):
@@ -294,54 +342,145 @@ class PrefillEngine:
                     for sb in range(block_period(cfg)):
                         c = layers[f"sub{sb}"]
                         cross[(bk, sb)] = (c["xk"][bk, i], c["xv"][bk, i])
+            snaps = self._extract_snapshots(layers, i, lens[i],
+                                            snap_stride, s, base=0)
             outs.append(PrefillOutput(int(first[i]), k, v, mstate, ln,
-                                      cross))
+                                      cross, snaps))
         return outs
 
-    def run_suffix(self, suffix_tokens: Sequence[int], prefix_kv: jax.Array,
+    def _extract_snapshots(self, layers: Tree, row: int, valid: int,
+                           snap_stride: int, s_pad: int, base: int
+                           ) -> Optional[Dict[int, Tree]]:
+        """Per-request boundary snapshots from the stacked prefill cache:
+        {base + j*stride: {(blk,sub): conv tails + SSD state}} for every
+        stride boundary inside the row's VALID tokens (boundaries past
+        valid_len hold frozen state but pad-garbage conv rows — never
+        stored). ``base`` offsets boundaries to absolute prompt
+        positions for suffix-only runs."""
+        if not snap_stride or not self._mamba_order:
+            return None
+        snaps: Dict[int, Tree] = {}
+        for j in range(1, s_pad // snap_stride + 1):
+            t = j * snap_stride
+            if t > valid:
+                break
+            entry: Tree = {}
+            for bk, sb in self._mamba_order:
+                c = layers[f"sub{sb}"]
+                entry[(bk, sb)] = {
+                    "conv_x": c["snap_conv_x"][bk, j - 1, row],
+                    "conv_b": c["snap_conv_b"][bk, j - 1, row],
+                    "conv_c": c["snap_conv_c"][bk, j - 1, row],
+                    "state": c["snap_state"][bk, j - 1, row],
+                }
+            snaps[base + t] = entry
+        return snaps
+
+    def run_suffix(self, suffix_tokens: Sequence[int],
+                   prefix_kv: Optional[jax.Array] = None,
                    frames: Optional[object] = None,
-                   on_layer: Optional[OnLayer] = None) -> PrefillOutput:
+                   on_layer: Optional[OnLayer] = None, *,
+                   state: Optional[Tree] = None,
+                   prefix_len: Optional[int] = None,
+                   snap_stride: int = 0) -> PrefillOutput:
         """Suffix-only prefill after a prefix hit.
 
         ``prefix_kv``: (attn_layers, plen, 2*kv_dim) — the cached prefix
         KVCache gathered from the paged pool (kernels.kv_gather), K and V
-        packed along the last axis exactly as the pool stores them. Runs
-        the forward pass over only ``suffix_tokens`` (right-padded to a
-        length bucket — pad rows attend to nothing and are sliced off)
-        with every attention sublayer attending over prefix ++ suffix;
-        returns a PrefillOutput whose k/v cover the FULL prompt (prefix
-        stitched back on) so the transfer/decode path downstream is
-        unchanged. The prefix KV is right-padded to its own power-of-two
-        bucket with the real length passed as a TRACED scalar (padded
-        prefix keys are masked from every softmax), so warm admissions
-        retrace per (prefix bucket, suffix bucket) — O(num_buckets^2)
-        programs cluster-wide — never per distinct prefix length.
+        packed along the last axis exactly as the pool stores them; None
+        for attention-free stacks (whose prefix lives entirely in
+        ``state``). Runs the forward pass over only ``suffix_tokens``
+        (right-padded to a length bucket — pad rows attend to nothing
+        and are sliced off) with every attention sublayer attending over
+        prefix ++ suffix; returns a PrefillOutput whose k/v cover the
+        FULL prompt (prefix stitched back on) so the transfer/decode
+        path downstream is unchanged. The prefix KV is right-padded to
+        its own power-of-two bucket with the real length passed as a
+        TRACED scalar (padded prefix keys are masked from every
+        softmax), so warm admissions retrace per (prefix bucket, suffix
+        bucket) — O(num_buckets^2) programs cluster-wide — never per
+        distinct prefix length.
+
+        ``state`` is the boundary snapshot for SSM/hybrid stacks — per
+        (blk,sub) {"conv_x","conv_b","conv_c","state"} cached by the
+        pool at the reuse boundary — seeding each mamba sublayer's conv
+        windows and SSD scan so the suffix run continues the recurrence
+        bitwise (the returned ``mamba_state`` is the RESTORED state
+        advanced over the suffix, ready for decode hand-off / transfer).
+        ``prefix_len`` is required when ``prefix_kv`` is None.
+        ``snap_stride`` > 0 additionally emits new snapshots over the
+        suffix, reported at ABSOLUTE boundaries in ``out.snapshots``.
         """
         cfg = self.cfg
         assert self.supports_prefix_reuse, cfg.name
+        if self.requires_state_restore:
+            assert state is not None, \
+                f"{cfg.name}: SSM warm hit needs a state snapshot"
         s = len(suffix_tokens)
         assert s >= 1, "prefix hit must leave at least one suffix token"
-        s_pad = self._bucket_len(s) if self.bucket_prefill else s
-        plen = int(prefix_kv.shape[1])
-        # capacity-MoE prefix hits must land on capacity-window
+        plen = int(prefix_kv.shape[1]) if prefix_kv is not None \
+            else int(prefix_len)
+        if prefix_kv is not None and self._mamba_order and \
+                self.bucket_prefill:
+            # hybrid (attn + SSM) warm runs carry a BITWISE state-parity
+            # contract: XLA's key-axis reduction tiling depends on the
+            # padded length, so the warm softmax/PV matmul only
+            # reproduces the cold run bit-for-bit when prefix ++ suffix
+            # keys occupy exactly the geometry the cold run padded to —
+            # prefix at its true (aligned) length, suffix padded so the
+            # total lands on the cold bucket of the full prompt.
+            s_pad = self._bucket_len(plen + s) - plen
+        else:
+            s_pad = self._bucket_len(s) if self.bucket_prefill else s
+        assert prefix_len is None or int(prefix_len) == plen
+        # capacity-MoE / SSD-chunk prefix hits must land on aligned
         # boundaries (the pool's aligned acquire guarantees this; a
-        # misaligned prefix would shift the suffix's capacity windows)
+        # misaligned prefix would shift the suffix's capacity windows
+        # or de-align the suffix SSD chunk partition)
         assert plen % self.prefix_align == 0, (plen, self.prefix_align)
-        p_pad = self._bucket_len(plen) if self.bucket_prefill else plen
-        if p_pad != plen:
-            prefix_kv = jnp.pad(prefix_kv,
-                                ((0, 0), (0, p_pad - plen), (0, 0)))
-        kvd = cfg.kv_dim
-        k_pre, v_pre = prefix_kv[..., :kvd], prefix_kv[..., kvd:]
         period = block_period(cfg)
         nblk = num_blocks(cfg)
-        attn_idx = {pair: li for li, pair in enumerate(self._attn_order)}
-        prefix: Tree = {}
-        for sb in range(period):
-            ks = jnp.stack([k_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
-            vs = jnp.stack([v_pre[attn_idx[(bk, sb)]] for bk in range(nblk)])
-            # (num_blocks, b=1, p_pad, kv_dim), scanned alongside params
-            prefix[f"sub{sb}"] = {"k": ks[:, None], "v": vs[:, None]}
+        prefix: Optional[Tree] = None
+        k_pre = v_pre = None
+        p_pad = 0
+        if prefix_kv is not None:
+            # hybrid: prefix stays at its exact aligned length (see the
+            # s_pad choice above); attn-only keeps the O(buckets^2)
+            # prefix-bucket scheme
+            p_pad = plen if self._mamba_order else (
+                self._bucket_len(plen) if self.bucket_prefill else plen)
+            if p_pad != plen:
+                prefix_kv = jnp.pad(prefix_kv,
+                                    ((0, 0), (0, p_pad - plen), (0, 0)))
+            kvd = cfg.kv_dim
+            k_pre, v_pre = prefix_kv[..., :kvd], prefix_kv[..., kvd:]
+            attn_idx = {pair: li
+                        for li, pair in enumerate(self._attn_order)}
+            prefix = {}
+            for sb in range(period):
+                if (0, sb) not in attn_idx:
+                    prefix[f"sub{sb}"] = {}   # mamba sub: state, not KV
+                    continue
+                ks = jnp.stack([k_pre[attn_idx[(bk, sb)]]
+                                for bk in range(nblk)])
+                vs = jnp.stack([v_pre[attn_idx[(bk, sb)]]
+                                for bk in range(nblk)])
+                # (num_blocks, b=1, p_pad, kv_dim), scanned with params
+                prefix[f"sub{sb}"] = {"k": ks[:, None], "v": vs[:, None]}
+        ssm_init: Optional[Tree] = None
+        if state is not None:
+            mamba_subs = {sb for _, sb in self._mamba_order}
+            ssm_init = {}
+            for sb in range(period):
+                if sb not in mamba_subs:
+                    ssm_init[f"sub{sb}"] = {}
+                    continue
+                # stack snapshot leaves over blocks, batch dim 1 — exact
+                # dtypes preserved (restore must be bitwise)
+                ssm_init[f"sub{sb}"] = {
+                    k2: jnp.stack([jnp.asarray(state[(bk, sb)][k2])[None]
+                                   for bk in range(nblk)])
+                    for k2 in ("conv_x", "conv_b", "conv_c", "state")}
         toks = list(suffix_tokens) + [0] * (s_pad - s)
         batch = {"tokens": jnp.asarray([toks], jnp.int32)}
         if cfg.is_encoder_decoder:
@@ -349,23 +488,38 @@ class PrefillEngine:
             batch["frames"] = jnp.asarray(frames)[None]
         first, cache = self._prefill(
             batch, last_index=jnp.asarray([s - 1]), prefix=prefix,
-            prefix_len=jnp.asarray(plen, jnp.int32))
+            prefix_len=jnp.asarray(plen, jnp.int32), ssm_init=ssm_init,
+            snap_stride=snap_stride if self._mamba_order else 0)
         self.compute_tokens += s
-        self.padded_tokens += (s_pad - s) + (p_pad - plen)
+        self.padded_tokens += (s_pad - s) + (p_pad - plen if p_pad else 0)
         self.reused_tokens += plen
         self.prefix_prefills += 1
-        self._count_launch(("suffix", p_pad, s_pad))
+        if state is not None:
+            self.state_restores += 1
+        self._count_launch(("suffix", p_pad, s_pad, snap_stride))
         layers = cache["layers"]
-        k_suf = jnp.stack([layers[f"sub{sb}"]["k"][bk, 0, :s]
-                           for bk, sb in self._attn_order])
-        v_suf = jnp.stack([layers[f"sub{sb}"]["v"][bk, 0, :s]
-                           for bk, sb in self._attn_order])
-        # stitch with the REAL prefix rows only (bucket pads sliced off):
-        # no KV row past the ledgered compute/reused tokens survives
-        k = jnp.concatenate([k_pre[:, :plen].astype(k_suf.dtype), k_suf],
-                            axis=1)
-        v = jnp.concatenate([v_pre[:, :plen].astype(v_suf.dtype), v_suf],
-                            axis=1)
+        k = v = None
+        if self._attn_order:
+            k_suf = jnp.stack([layers[f"sub{sb}"]["k"][bk, 0, :s]
+                               for bk, sb in self._attn_order])
+            v_suf = jnp.stack([layers[f"sub{sb}"]["v"][bk, 0, :s]
+                               for bk, sb in self._attn_order])
+            # stitch with the REAL prefix rows only (bucket pads sliced
+            # off): no KV row past the ledgered compute/reused tokens
+            # survives
+            k = jnp.concatenate([k_pre[:, :plen].astype(k_suf.dtype),
+                                 k_suf], axis=1)
+            v = jnp.concatenate([v_pre[:, :plen].astype(v_suf.dtype),
+                                 v_suf], axis=1)
+        mstate: Tree = {}
+        for bk, sb in self._mamba_order:
+            c = layers[f"sub{sb}"]
+            mstate[(bk, sb)] = {
+                "conv_x": c["conv_x"][bk, 0],
+                "conv_b": c["conv_b"][bk, 0],
+                "conv_c": c["conv_c"][bk, 0],
+                "state": c["state"][bk, 0],
+            }
         cross: Optional[Tree] = None
         if cfg.is_encoder_decoder:
             cross = {}
@@ -373,7 +527,11 @@ class PrefillEngine:
                 for sb in range(period):
                     c = layers[f"sub{sb}"]
                     cross[(bk, sb)] = (c["xk"][bk, 0], c["xv"][bk, 0])
-        out = PrefillOutput(int(first[0]), k, v, {}, plen + s, cross)
+        snaps = self._extract_snapshots(
+            layers, 0, s, snap_stride if self._mamba_order else 0,
+            s_pad, base=plen)
+        out = PrefillOutput(int(first[0]), k, v, mstate, plen + s, cross,
+                            snaps)
         # stream the FULL prompt's layers (prefix stitched back on): the
         # receiver's layout is identical to a cold prefill's
         self._emit_layers(on_layer, 0, k, v)

@@ -330,7 +330,10 @@ class ServeGroup:
         prefixes hot inside its own group, Fig. 1b)."""
         agg = {"lookups": 0.0, "hits": 0.0, "hit_tokens": 0.0,
                "evictions": 0.0, "cow_copies": 0.0,
-               "compute_tokens": 0.0, "reused_tokens": 0.0}
+               "compute_tokens": 0.0, "reused_tokens": 0.0,
+               "snap_hits": 0.0, "snap_misses": 0.0,
+               "snap_stores": 0.0, "snap_bytes": 0.0,
+               "state_restores": 0.0}
         for p in self.prefills:
             for k, v in p.prefix_stats().items():
                 agg[k] += v
@@ -372,6 +375,7 @@ class ServeGroup:
                 "retries": 0.0, "requeues": 0.0,
                 "admission_wait_mean_s": _mean(w),
                 "link_busy_s": sum(w),
+                "state_segments": 0.0, "state_payload_bytes": 0.0,
             }
         # medians: first samples per shape carry one-time JIT compile cost
         out["decode_step_median_s"] = _median(self.decode_step_s[-32:])

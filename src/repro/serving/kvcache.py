@@ -20,6 +20,19 @@ allocation pressure evicts them (leaf-first) instead of raising
 ``PoolExhausted`` outright. A block a live request holds is never
 evicted, freed, or overwritten. The placement-accounting twin of this
 mechanism (simulator side) lives in ``repro.core.prefix_cache``.
+
+Recurrent-state snapshots (SSM/hybrid families): alongside the KV
+blocks, the trie stores boundary snapshots — per-layer (conv tails,
+SSD state) trees keyed by the cached block whose END is the snapshot
+boundary. A snapshot lives and dies with its block: it is attached at
+``insert_prefix`` (boundary -> state, supplied by the engine's
+``snap_stride`` emission), dropped in ``_evict_one`` the moment the
+block is evicted (lockstep eviction — a snapshot never outlives or
+orphans its blocks; leaf-first eviction keeps every snapshot's chain
+rooted), and never copied on COW (a COW tail is a *partial* block, so
+its end is never a snapshot boundary). ``require_state`` acquires round
+the hit DOWN to the nearest boundary that still holds a snapshot —
+SSM engines cannot restore from a KV-only match.
 """
 from __future__ import annotations
 
@@ -72,10 +85,15 @@ class PagedKVPool:
         self._free: List[int] = list(range(num_blocks))
         self._owned: Dict[int, List[int]] = {}       # rid -> blocks
         # ---- prefix index state (enable_prefix_cache only) ----
-        self.enable_prefix_cache = enable_prefix_cache and n_attn > 0
+        # attn-free (pure SSM) stacks cache too: their zero-width KV
+        # blocks are trie key-holders for the boundary snapshots
+        self.enable_prefix_cache = bool(enable_prefix_cache)
         self._roots: Dict[Optional[str], _PrefixNode] = {}
         self._cached: Dict[int, _PrefixNode] = {}    # block -> trie node
         self._ref: Dict[int, int] = {}               # cached block -> holders
+        # recurrent-state snapshots: cached block -> per-(blk,sub) state
+        # tree at the boundary ENDING at that block (lockstep-evicted)
+        self._snaps: Dict[int, dict] = {}
         self._clock = 0
         # observability
         self.lookups = 0
@@ -84,6 +102,10 @@ class PagedKVPool:
         self.evictions = 0
         self.cow_copies = 0
         self.storage_writes = 0      # engine-issued storage swaps
+        self.snap_hits = 0           # acquires served with a snapshot
+        self.snap_misses = 0         # KV match degraded: boundary had none
+        self.snap_stores = 0         # snapshots attached to the trie
+        self.snap_bytes = 0          # resident snapshot bytes
 
     def set_storage(self, storage: jax.Array):
         """Adopt a new storage buffer (the decode engines route their
@@ -165,6 +187,9 @@ class PagedKVPool:
         ok &= not (set(self._free) & (set(private) | cached))
         ok &= sorted(set(self._free) | set(private) | cached) \
             == list(range(self.num_blocks))
+        # a snapshot never outlives its block: every snapshot key must
+        # be a live cached block (lockstep eviction)
+        ok &= set(self._snaps) <= cached
         return bool(ok)
 
     # ----------------------------------------------------- prefix index
@@ -209,23 +234,43 @@ class PagedKVPool:
                     best, best_l = ch, l
             return chain, ((best, best_l) if best is not None else None)
 
+    def _snap_floor(self, full: List[_PrefixNode], target: int,
+                    align: int) -> int:
+        """Round an aligned match DOWN to the nearest boundary holding a
+        recurrent-state snapshot (require_state acquires). ``align``
+        must cover whole blocks in this mode, so every candidate
+        boundary ends exactly at a full-block node."""
+        bs = self.block_size
+        assert align % bs == 0, (align, bs)
+        target = min(target, len(full) * bs)
+        target -= target % align
+        while target > 0 and \
+                full[target // bs - 1].block not in self._snaps:
+            target -= align
+        return target
+
     def peek_prefix(self, tokens: Sequence[int],
                     namespace: Optional[str] = None,
-                    align: int = 1) -> int:
+                    align: int = 1, require_state: bool = False) -> int:
         """Read-only match length in tokens (for routing affinity);
         does not touch refcounts or recency. ``align`` rounds the
         reported hit DOWN to a multiple (capacity-MoE engines require
-        window-aligned prefixes — see PrefillEngine.prefix_align)."""
+        window-aligned prefixes — see PrefillEngine.prefix_align);
+        ``require_state`` further rounds down to the nearest snapshot
+        boundary (SSM engines cannot restore from a KV-only match)."""
         if not self.enable_prefix_cache or len(tokens) < 2:
             return 0
         full, tail = self._match(tokens, namespace)
         got = len(full) * self.block_size + (tail[1] if tail else 0)
         got = min(got, len(tokens) - 1)
-        return got - got % max(1, align)
+        got -= got % max(1, align)
+        if require_state:
+            got = self._snap_floor(full, got, align)
+        return got
 
     def acquire_prefix(self, rid: int, tokens: Sequence[int],
                        namespace: Optional[str] = None,
-                       align: int = 1) -> int:
+                       align: int = 1, require_state: bool = False) -> int:
         """Prefix lookup at admission: matched whole blocks become shared
         (refcounted) leading blocks of rid's allocation; a partial tail
         match is copy-on-written into a private block. Returns the cached
@@ -234,7 +279,13 @@ class PagedKVPool:
         ``align`` > 1 the hit is rounded DOWN to a multiple — a
         whole-block match past the boundary degrades into a COW tail (or
         is dropped), so engines whose suffix math needs aligned reuse
-        boundaries (window-local capacity MoE) stay exact."""
+        boundaries (window-local capacity MoE) stay exact.
+
+        ``require_state`` (SSM/hybrid engines): the hit must land on a
+        boundary whose block holds a recurrent-state snapshot — a match
+        cut anywhere else (including any would-be COW tail) degrades to
+        the nearest snapshot boundary below, or to a clean miss. The
+        caller reads the snapshot back with ``snapshot_for``."""
         if not self.enable_prefix_cache or len(tokens) < 2:
             return 0
         self.lookups += 1
@@ -243,6 +294,13 @@ class PagedKVPool:
         raw = len(full) * bs + (tail[1] if tail else 0)
         target = min(raw, len(tokens) - 1)
         target -= target % max(1, align)
+        if require_state:
+            want = target
+            target = self._snap_floor(full, target, align)
+            if want > 0 and target < want:
+                self.snap_misses += 1   # KV matched past the boundary
+            if target > 0:
+                self.snap_hits += 1
         n_full = min(len(full), target // bs)
         rem = target - n_full * bs
         tail_node = None
@@ -294,12 +352,26 @@ class PagedKVPool:
         self._touch(full[n_full - 1] if n_full else tail_node)
         return cached
 
+    @staticmethod
+    def _snap_nbytes(state: dict) -> int:
+        return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                   for a in jax.tree.leaves(state))
+
     def insert_prefix(self, rid: int, tokens: Sequence[int],
-                      namespace: Optional[str] = None):
+                      namespace: Optional[str] = None,
+                      states: Optional[Dict[int, dict]] = None):
         """Register rid's prefilled blocks in the trie so later requests
         can share them. Blocks already shared (matched at acquire time)
         are only recency-touched; private blocks become cached with the
-        owning request as their first reference."""
+        owning request as their first reference.
+
+        ``states`` maps ABSOLUTE token boundaries -> recurrent-state
+        snapshot trees (the engine's ``snap_stride`` emission): each is
+        attached to the cached block ending at its boundary, so it is
+        refcounted/evicted in lockstep with that block. Pre-existing
+        nodes missing a snapshot pick one up too (a warm run emits
+        snapshots for the NEW suffix boundaries only, but a cold rerun
+        of a longer prompt may backfill earlier boundaries)."""
         if not self.enable_prefix_cache:
             return
         blocks = self._owned.get(rid, [])
@@ -321,9 +393,23 @@ class PagedKVPool:
                 self._cached[b] = child
                 self._ref[b] = self._ref.get(b, 0) + 1   # rid holds it
             child.last_use = self._clock
+            if len(chunk) == bs and states \
+                    and (i + 1) * bs in states \
+                    and child.block not in self._snaps:
+                st = states[(i + 1) * bs]
+                self._snaps[child.block] = st
+                self.snap_stores += 1
+                self.snap_bytes += self._snap_nbytes(st)
             if len(chunk) < bs:
                 break       # partial tail is a leaf
             node = child
+
+    def snapshot_for(self, rid: int, cached: int) -> dict:
+        """The recurrent-state snapshot at rid's acquired boundary
+        (``cached`` tokens, as returned by a require_state acquire)."""
+        bs = self.block_size
+        assert cached > 0 and cached % bs == 0, cached
+        return self._snaps[self._owned[rid][cached // bs - 1]]
 
     def _touch(self, node: Optional[_PrefixNode]):
         self._clock += 1
@@ -343,6 +429,10 @@ class PagedKVPool:
             return False
         del self._cached[best.block]
         self._ref.pop(best.block, None)
+        # lockstep: the boundary snapshot dies with its block
+        snap = self._snaps.pop(best.block, None)
+        if snap is not None:
+            self.snap_bytes -= self._snap_nbytes(snap)
         if best.parent is not None:
             best.parent.children.pop(best.key, None)
         self._free.append(best.block)

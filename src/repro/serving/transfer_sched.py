@@ -150,6 +150,8 @@ class TransferScheduler:
         self.n_admitted = 0
         self.n_retries = 0
         self.n_requeues = 0
+        self.state_segments = 0           # trailing state payloads shipped
+        self.state_bytes = 0              # ... and their wire bytes
         self.admission_waits: List[float] = []
 
     # ------------------------------------------------------------ intake
@@ -204,10 +206,16 @@ class TransferScheduler:
         state_bytes = state_payload_nbytes(out)
         if state_bytes:
             # the recurrent/cross state is only final once the whole
-            # forward is done: it ships last, alongside the KV payload
+            # forward is done: it ships last, alongside the KV payload.
+            # Warm (prefix-reuse) SSM admissions ship the RESTORED state
+            # advanced over the suffix — out.mamba_state comes straight
+            # from run_suffix's snapshot-seeded forward, never a
+            # recompute of the cached prefix
             segments.append(Segment(
                 layer=-1, offset=sum(s.nbytes for s in segments),
                 nbytes=state_bytes, ready_t=prefill_done))
+            self.state_segments += 1
+            self.state_bytes += state_bytes
         job = TransferJob(
             rid=rid, req=req, out=out, src_iid=src_iid, dst=dst,
             dst_blocks=dst_blocks, n_kv_blocks=n_kv, segments=segments,
@@ -397,4 +405,6 @@ class TransferScheduler:
             "link_busy_s": sum(l.busy_s for l in self.links.values()),
             "link_msgs": float(sum(l.n_msgs for l in self.links.values())),
             "link_bytes": float(sum(l.nbytes for l in self.links.values())),
+            "state_segments": float(self.state_segments),
+            "state_payload_bytes": float(self.state_bytes),
         }

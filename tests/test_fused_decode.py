@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from conftest import reduced_params
+from parity_utils import BS, admit as _admit, decode_setup as _setup
 from repro.models.modeling import decode_step_cache_size, forward_decode, \
     forward_prefill
 from repro.serving.engine import DecodeEngine, PrefillEngine, \
@@ -21,30 +22,6 @@ from repro.serving.kvcache import PagedKVPool
 
 FAMILIES = ["granite-3-8b", "qwen2-moe-a2.7b", "mamba2-2.7b",
             "jamba-1.5-large-398b", "pixtral-12b", "whisper-base"]
-
-BS = 4
-
-
-def _setup(arch, n_prompts=3, seed=5):
-    cfg, params = reduced_params(arch)
-    rng = np.random.default_rng(seed)
-    prompts = [list(rng.integers(0, cfg.vocab_size, int(n)))
-               for n in rng.integers(5, 14, n_prompts)]
-    frames = None
-    if cfg.is_encoder_decoder:
-        frames = [np.asarray(
-            rng.normal(size=(cfg.encoder_seq, cfg.d_model)) * 0.1,
-            np.float32) for _ in prompts]
-    return cfg, params, prompts, frames
-
-
-def _admit(pool, de, rid, out, room=10):
-    pool.alloc(rid, out.prompt_len + room)
-    if out.k is not None:
-        pool.write_prefill(
-            pool.owned(rid)[: (out.prompt_len + BS - 1) // BS],
-            out.k, out.v)
-    return de.admit(rid, out, pool.owned(rid))
 
 
 def _churn_run(cfg, params, outs, *, fused, num_blocks=48):

@@ -6,7 +6,11 @@ Invariants:
   * a shared block is never freed or returned by the allocator while a
     live request references it;
   * free + uniquely-owned + cached always partitions num_blocks;
-  * eviction under pressure never evicts a block a live request holds.
+  * eviction under pressure never evicts a block a live request holds;
+  * recurrent-state snapshots (PR 6) live in LOCKSTEP with their
+    blocks: a snapshot never outlives its block (eviction drops it), a
+    require_state hit always lands on a boundary whose snapshot is
+    resident, and the snap_bytes ledger never leaks.
 """
 import numpy as np
 from hypothesis import given, settings, strategies as st
@@ -16,12 +20,29 @@ from repro.serving.kvcache import PagedKVPool, PoolExhausted
 
 NUM_BLOCKS = 16
 BS = 4
+ALIGN = 2 * BS                      # snapshot stride for the props
 
 
 def _pool():
     cfg, _ = reduced_params("granite-3-8b")
     return PagedKVPool(cfg, num_blocks=NUM_BLOCKS, block_size=BS,
                        enable_prefix_cache=True)
+
+
+def _snap(t):
+    return {"state": np.full((3,), float(t), np.float32),
+            "conv_x": np.full((2, 2), float(t), np.float32)}
+
+
+def _states_for(toks):
+    return {t: _snap(t) for t in range(ALIGN, len(toks) + 1, ALIGN)}
+
+
+def _snaps_consistent(pool):
+    """No orphan (snapshot on a non-cached block) and no ledger leak."""
+    assert set(pool._snaps) <= set(pool._cached)
+    assert pool.snap_bytes == sum(pool._snap_nbytes(s)
+                                  for s in pool._snaps.values())
 
 
 def _live_shared_blocks(pool, live):
@@ -111,4 +132,149 @@ def test_full_pool_churn_recovers_all_blocks(seed):
         pool.alloc(777, NUM_BLOCKS * BS)
     except PoolExhausted:
         pass
+    assert pool.invariant_ok()
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_snapshot_refcounts_track_blocks(data):
+    """Random admit/acquire/release/pressure workload with snapshots
+    riding every ALIGN boundary: snapshots stay in lockstep with their
+    blocks through sharing, COW-degrade, and eviction."""
+    pool = _pool()
+    live = set()
+    rid_next = 0
+    for _ in range(data.draw(st.integers(2, 25))):
+        op = data.draw(st.sampled_from(
+            ["admit", "acquire_state", "release", "pressure"]))
+        if op == "release" and live:
+            rid = data.draw(st.sampled_from(sorted(live)))
+            pool.release(rid)
+            live.discard(rid)
+        elif op == "pressure":
+            rid = 9000 + rid_next
+            rid_next += 1
+            try:
+                pool.alloc(rid, data.draw(st.integers(1, 24)))
+                live.add(rid)
+            except PoolExhausted:
+                pass
+        elif op == "acquire_state":
+            # a state-requiring hit must land on a snapshot boundary
+            rid = rid_next
+            rid_next += 1
+            toks = data.draw(st.lists(st.integers(0, 3), min_size=2,
+                                      max_size=20))
+            got = pool.acquire_prefix(rid, toks, align=ALIGN,
+                                      require_state=True)
+            assert got % ALIGN == 0
+            if got:
+                assert pool.snapshot_for(rid, got) is not None
+                live.add(rid)
+            else:
+                assert pool.owned(rid) == []
+        else:
+            rid = rid_next
+            rid_next += 1
+            toks = data.draw(st.lists(st.integers(0, 3), min_size=2,
+                                      max_size=20))
+            try:
+                pool.acquire_prefix(rid, toks, align=ALIGN,
+                                    require_state=True)
+                pool.alloc_to(rid, len(toks))
+            except PoolExhausted:
+                pool.release(rid)
+                continue
+            pool.insert_prefix(rid, toks, states=_states_for(toks))
+            live.add(rid)
+        assert pool.invariant_ok()
+        _snaps_consistent(pool)
+    for rid in sorted(live):
+        pool.release(rid)
+    _snaps_consistent(pool)
+    # full drain: every cached block (and with it every snapshot) must
+    # be evictable once nothing is live
+    pool.alloc(7777, NUM_BLOCKS * BS)
+    assert pool.cached_blocks == 0
+    assert pool._snaps == {} and pool.snap_bytes == 0
+    assert pool.invariant_ok()
+
+
+def test_snapshot_lockstep_seeded_churn():
+    """Seeded (hypothesis-free) mirror of the churn property above: the
+    same acquire/release/evict/degrade workload on a fixed numpy rng,
+    so the lockstep invariant executes even where hypothesis is
+    unavailable (PR 3 precedent)."""
+    for seed in (0, 1, 7):
+        rng = np.random.default_rng(seed)
+        pool = _pool()
+        live = set()
+        rid_next = 0
+        for _ in range(30):
+            op = ["admit", "acquire_state", "release",
+                  "pressure"][rng.integers(0, 4)]
+            if op == "release" and live:
+                rid = sorted(live)[rng.integers(0, len(live))]
+                pool.release(rid)
+                live.discard(rid)
+            elif op == "pressure":
+                rid = 9000 + rid_next
+                rid_next += 1
+                try:
+                    pool.alloc(rid, int(rng.integers(1, 25)))
+                    live.add(rid)
+                except PoolExhausted:
+                    pass
+            else:
+                rid = rid_next
+                rid_next += 1
+                toks = [int(t) for t in rng.integers(
+                    0, 4, int(rng.integers(2, 21)))]
+                got = pool.acquire_prefix(rid, toks, align=ALIGN,
+                                          require_state=True)
+                assert got % ALIGN == 0
+                if got:
+                    assert pool.snapshot_for(rid, got) is not None
+                if op == "acquire_state":
+                    if got:
+                        live.add(rid)
+                    continue
+                try:
+                    pool.alloc_to(rid, len(toks))
+                except PoolExhausted:
+                    pool.release(rid)
+                    continue
+                pool.insert_prefix(rid, toks, states=_states_for(toks))
+                live.add(rid)
+            assert pool.invariant_ok()
+            _snaps_consistent(pool)
+        for rid in sorted(live):
+            pool.release(rid)
+        pool.alloc(7777, NUM_BLOCKS * BS)    # full drain
+        assert pool.cached_blocks == 0
+        assert pool._snaps == {} and pool.snap_bytes == 0
+        assert pool.invariant_ok()
+
+
+def test_eviction_drops_boundary_snapshot_seeded():
+    """Seeded (hypothesis-free) lockstep check: evicting the block that
+    holds a boundary snapshot drops the snapshot and its bytes — and a
+    later require_state acquire floors past the dead boundary."""
+    pool = _pool()
+    toks = list(range(ALIGN * 2))            # boundaries at 8 and 16
+    pool.alloc(0, len(toks))
+    pool.insert_prefix(0, toks, states=_states_for(toks))
+    assert pool.snap_stores == 2 and pool.snap_bytes > 0
+    pool.release(0)
+    bytes_full = pool.snap_bytes
+    # leaf-first eviction: one block of pressure kills the TAIL block,
+    # which carries the 16-boundary snapshot
+    pool.alloc(1, BS * (NUM_BLOCKS - pool.cached_blocks) + BS)
+    assert pool.evictions >= 1
+    _snaps_consistent(pool)
+    assert pool.snap_bytes < bytes_full
+    got = pool.acquire_prefix(2, toks + [99], align=ALIGN,
+                              require_state=True)
+    assert got == ALIGN                      # floored past dead 16
+    assert pool.snapshot_for(2, got)["state"][0] == float(ALIGN)
     assert pool.invariant_ok()

@@ -3,7 +3,10 @@
 Warm (prefix-hit, suffix-only) serving must emit token-identical output
 to a cold run, while the compute-token counter proves the forward pass
 covered only the uncached suffix. One config per family: dense / MoE /
-ssm-hybrid (skip path) / encoder-decoder; attn-free bypasses the index.
+encoder-decoder reuse KV alone; SSM/hybrid (jamba) and attention-free
+(mamba2) stacks additionally restore the boundary recurrent-state
+snapshot (PR 6 — bit-level state parity is pinned in
+tests/test_state_snapshot_reuse.py; here the serving-path contract).
 """
 import dataclasses
 
@@ -13,57 +16,29 @@ import numpy as np
 import pytest
 
 from conftest import reduced_params
+from parity_utils import EXACT_PREFILL, POOL_KW, family_setup, \
+    prefill_node, serve_sequential
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill_pallas
-from repro.serving.cluster import ServeRequest
-from repro.serving.frontend import ClusterFrontend
 from repro.serving.kvcache import PagedKVPool, PoolExhausted
 
-POOL_KW = {"block_size": 4, "num_blocks": 96}
-
-# archs where suffix-only reuse actually fires; jamba (hybrid SSM state)
-# must take the skip path and still match
+# families where suffix-only reuse is KV-only; SSM/hybrid families ride
+# the same path plus a state-snapshot restore (tested below)
 REUSE_ARCHS = ["granite-3-8b", "qwen2-moe-a2.7b", "whisper-base"]
-SKIP_ARCHS = ["jamba-1.5-large-398b"]
-
-
-def _family_setup(arch, rng):
-    cfg, params = reduced_params(arch)
-    if cfg.moe is not None:
-        # capacity dispatch drops tokens as a function of the WHOLE batch
-        # (suffix-only prefill changes T), so exact parity needs the
-        # dropless sorted dispatch; param shapes are identical
-        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
-                                                  dispatch="sorted"))
-    frames = None
-    if cfg.is_encoder_decoder:
-        frames = np.asarray(
-            rng.normal(size=(cfg.encoder_seq, cfg.d_model)) * 0.1,
-            np.float32)
-    return cfg, params, frames
+STATE_ARCHS = ["jamba-1.5-large-398b", "mamba2-2.7b"]
 
 
 def _serve(cfg, params, prompts, *, prefix_cache, frames=None, max_new=3):
-    """Sequential requests through a 1P:1D frontend; returns (generated
-    sequences, prefill node)."""
-    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
-                         prefix_cache=prefix_cache,
-                         prefill_kwargs=dict(POOL_KW),
-                         decode_kwargs=dict(POOL_KW))
-    gens = []
-    for i, toks in enumerate(prompts):
-        req = ServeRequest(rid=i, tokens=list(toks), max_new_tokens=max_new,
-                           frames=frames)
-        fe.run([req], max_ticks=80)
-        assert req.done
-        gens.append(list(req.generated))
-    return gens, fe.groups["default"].prefills[0]
+    gens, fe = serve_sequential(cfg, params, prompts,
+                                prefix_cache=prefix_cache, frames=frames,
+                                max_new=max_new)
+    return gens, prefill_node(fe)
 
 
 @pytest.mark.parametrize("arch", REUSE_ARCHS)
 def test_warm_matches_cold_and_computes_suffix_only(arch):
     rng = np.random.default_rng(3)
-    cfg, params, frames = _family_setup(arch, rng)
+    cfg, params, frames = family_setup(arch, rng)
     prefix = list(map(int, rng.integers(0, cfg.vocab_size, 12)))
     suffixes = [list(map(int, rng.integers(0, cfg.vocab_size, 5)))
                 for _ in range(3)]
@@ -85,13 +60,19 @@ def test_warm_matches_cold_and_computes_suffix_only(arch):
     assert wn.pool.invariant_ok()
 
 
-@pytest.mark.parametrize("arch", SKIP_ARCHS)
-def test_hybrid_takes_skip_path(arch):
-    """SSM/hybrid stacks carry recurrent state a KV prefix cannot
-    restore: the index must stay disabled and outputs identical."""
+@pytest.mark.parametrize("arch", STATE_ARCHS)
+@pytest.mark.skipif(EXACT_PREFILL,
+                    reason="SSM snapshot reuse is gated off under "
+                    "REPRO_PREFILL=exact (serves cold; degrade "
+                    "pinned in test_state_snapshot_reuse)")
+def test_ssm_families_serve_warm_with_state_restore(arch):
+    """SSM/hybrid stacks carry recurrent state a KV prefix alone cannot
+    restore: the index stays ON and a snapshot restore rides each hit.
+    Hits land on snapshot-stride boundaries, so the reused span is the
+    prefix rounded DOWN to the node's stride."""
     rng = np.random.default_rng(4)
-    cfg, params, frames = _family_setup(arch, rng)
-    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    cfg, params, frames = family_setup(arch, rng, sorted_moe=False)
+    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 35)))
     prompts = [prefix + list(map(int, rng.integers(0, cfg.vocab_size, 4)))
                for _ in range(2)]
     cold, cn = _serve(cfg, params, prompts, prefix_cache=False,
@@ -99,9 +80,17 @@ def test_hybrid_takes_skip_path(arch):
     warm, wn = _serve(cfg, params, prompts, prefix_cache=True,
                       frames=frames, max_new=2)
     assert warm == cold
-    assert not wn.prefix_cache                       # gated off
-    assert wn.pool.lookups == 0 and wn.engine.prefix_prefills == 0
-    assert wn.engine.compute_tokens == cn.engine.compute_tokens
+    assert wn.prefix_cache and wn.needs_state
+    stride = wn.snap_stride
+    assert stride and stride % cfg.ssm_cfg.chunk == 0
+    # 35-token prefix degrades to the 32-boundary snapshot
+    reused = 35 - 35 % stride
+    assert wn.pool.hits == 1 and wn.pool.snap_hits == 1
+    assert wn.engine.state_restores == 1
+    assert wn.engine.reused_tokens == reused
+    assert wn.engine.compute_tokens == \
+        cn.engine.compute_tokens - reused
+    assert wn.pool.invariant_ok()
 
 
 def test_capacity_moe_joins_the_index_window_aligned():
@@ -167,18 +156,27 @@ def test_cow_exhaustion_degrade_stays_aligned():
     assert pool.owned(3) == [] and pool.invariant_ok()
 
 
-def test_attn_free_bypasses_index():
-    """No attention layers -> no KV pool content -> the index is
-    transparently bypassed (still serves, still deterministic)."""
+@pytest.mark.skipif(EXACT_PREFILL,
+                    reason="SSM snapshot reuse is gated off under "
+                    "REPRO_PREFILL=exact (serves cold; degrade "
+                    "pinned in test_state_snapshot_reuse)")
+def test_attn_free_indexes_zero_width_blocks():
+    """No attention layers -> blocks carry no KV payload, but the trie
+    still indexes them as KEY HOLDERS so state snapshots have blocks to
+    ride on: attention-free stacks now reuse prefixes via snapshots
+    instead of bypassing the index."""
     rng = np.random.default_rng(5)
     cfg, params = reduced_params("mamba2-2.7b")
-    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 33)))
     prompts = [prefix + list(map(int, rng.integers(0, cfg.vocab_size, 3)))
                for _ in range(2)]
     cold, _ = _serve(cfg, params, prompts, prefix_cache=False, max_new=2)
     warm, wn = _serve(cfg, params, prompts, prefix_cache=True, max_new=2)
     assert warm == cold
-    assert not wn.prefix_cache and wn.pool.lookups == 0
+    assert wn.prefix_cache and wn.pool.lookups > 0
+    assert wn.pool.attn_layers == 0          # zero-width KV blocks
+    assert wn.pool.hits == 1 and wn.pool.snap_hits == 1
+    assert wn.engine.state_restores == 1
 
 
 def test_cow_tail_partial_prefix():
@@ -199,6 +197,8 @@ def test_cow_tail_partial_prefix():
 def test_enc_dec_frames_partition_the_index():
     """Same decoder prefix but different frames must NOT share KV (the
     decoder hidden states depend on the encoder output)."""
+    from repro.serving.cluster import ServeRequest
+    from repro.serving.frontend import ClusterFrontend
     rng = np.random.default_rng(7)
     cfg, params = reduced_params("whisper-base")
     prefix = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
@@ -218,7 +218,7 @@ def test_enc_dec_frames_partition_the_index():
                            frames=fr)
         fe.run([req], max_ticks=80)
         gens[i] = list(req.generated)
-    node = fe.groups["default"].prefills[0]
+    node = prefill_node(fe)
     # request 1 (different frames) missed; request 2 (same frames as 1) hit
     assert node.pool.hits == 1
     # cross-check against cold single-request serving
