@@ -133,8 +133,8 @@ def _real_engine_rows() -> list:
         rows.append((f"transfer/real_admission_wait_{label}_us",
                      tf["admission_wait_mean_s"] * 1e6,
                      "prefill_done_to_decode_admitted"))
-        rows.append((f"transfer/real_ttft_ticks_{label}",
-                     float(np.mean(g.ttft_ticks)), "ticks_to_first_token"))
+        rows.append((f"transfer/real_ttft_{label}_s",
+                     float(np.mean(g.ttft_s)), "virtual_s_to_first_token"))
         rows.append((f"transfer/real_wall_{label}_s", wall, "e2e_wall"))
     assert res["overlapped"][1] == res["blocking"][1], "token parity broke"
     cut = (1 - res["overlapped"][0]["admission_wait_mean_s"]

@@ -6,8 +6,9 @@ import argparse
 import sys
 
 from benchmarks import (bench_decode, bench_e2e, bench_forwarding,
-                        bench_kernels, bench_pd_ratio, bench_prefill,
-                        bench_prefix_cache, bench_recovery, bench_transfer)
+                        bench_kernels, bench_open_loop, bench_pd_ratio,
+                        bench_prefill, bench_prefix_cache, bench_recovery,
+                        bench_transfer)
 from benchmarks.common import emit
 
 ALL = {
@@ -20,6 +21,7 @@ ALL = {
     "prefill": bench_prefill,         # exact vs bucketed prefill compiles
     "recovery": bench_recovery,       # Fig 13b/c/d
     "kernels": bench_kernels,         # kernel microbench
+    "open_loop": bench_open_loop,     # Poisson/tidal arrivals, TTFT/TPOT SLO
 }
 
 

@@ -82,8 +82,8 @@ def live_adjustment():
     fe.run(reqs, max_ticks=60)
     for _ in range(8):      # idle ticks: let the adjuster converge
         fe.tick()
-    for tick, old, new, kind in g.flips:
-        print(f"  tick {tick:3d}: {kind}  {old} -> {new} "
+    for t, old, new, kind in g.flips:
+        print(f"  t={float(t):7.3f}s: {kind}  {old} -> {new} "
               f"(re-registered in zookeeper)")
     print(f"live: final ratio {g.ratio[0]}P:{g.ratio[1]}D, "
           f"served {sum(r.done for r in reqs)}/{len(reqs)} during flips")

@@ -50,7 +50,10 @@ class ServeRequest:
     on_token: Optional[Callable[[int], None]] = None  # SSE stream
     frames: Optional[object] = None  # enc-dec: stub frontend embeddings
     scenario: str = "default"        # routes to the matching ServeGroup
-    submit_tick: int = -1            # set by the gateway (TTFT in ticks)
+    # virtual-second timeline stamps (set by the gateway / event core):
+    submit_t: float = -1.0           # gateway arrival
+    first_token_t: float = -1.0      # prefill batch completion (TTFT end)
+    finish_t: float = -1.0           # last decode token (TPOT window end)
 
 
 class PrefillNode:
@@ -88,6 +91,9 @@ class PrefillNode:
         self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
         self.sse_connections = 0
         self.draining = False        # pending role flip: no new traffic
+        self.busy_until = 0.0        # virtual time the node frees up
+        self._batch_evt = False      # a "batch" event is already queued
+        self._evictions_seen = 0     # pool evictions already ledgered
         # layer-streaming mode (overlapped transfer): per-rid payloads
         # {attn_layer -> (tokens, width) kv stripe} and batch timing
         self.staged: Dict[int, Dict[int, object]] = {}
@@ -222,6 +228,8 @@ class DecodeNode:
                                    max_slots=max_slots, fused=fused)
         self.requests: Dict[int, ServeRequest] = {}
         self.draining = False        # pending role flip: no new traffic
+        self.busy_until = 0.0        # virtual time the node frees up
+        self._step_evt = False       # a "step" event is already queued
 
     def can_admit(self) -> bool:
         return not self.draining and bool(self.engine.free_slots())
@@ -260,8 +268,12 @@ class DecodeNode:
         self.engine.admit(req.rid, out, self.pool.owned(req.rid))
         self.requests[req.rid] = req
 
-    def step(self):
+    def step(self) -> List[ServeRequest]:
+        """One continuous-batching iteration. Returns the requests that
+        finished during it (so the event core can stamp finish times and
+        fire freed-capacity events)."""
         res = self.engine.step()
+        finished: List[ServeRequest] = []
         for slot, tok in res.items():
             rid = self.engine.rid[slot]
             req = self.requests[rid]
@@ -273,6 +285,8 @@ class DecodeNode:
                 self.engine.evict(slot)
                 self.pool.release(rid)
                 del self.requests[rid]
+                finished.append(req)
+        return finished
 
 
 class MiniCluster:
@@ -287,12 +301,13 @@ class MiniCluster:
                  n_decode: int = 1, seed: int = 0,
                  transfer_mode: str = "block_free",
                  params=None, link: LinkModel = LinkModel(),
-                 overlap_transfer: bool = True):
+                 overlap_transfer: bool = True, tickless: bool = True):
         from repro.serving.frontend import ClusterFrontend  # import cycle
         self.frontend = ClusterFrontend(
             cfg, topology={"default": (n_prefill, n_decode)}, seed=seed,
             transfer_mode=transfer_mode, params=params, link=link,
-            flat_iids=True, overlap_transfer=overlap_transfer)
+            flat_iids=True, overlap_transfer=overlap_transfer,
+            tickless=tickless)
         self.cfg = cfg
         self.params = self.frontend.params
         self.transfer_mode = transfer_mode

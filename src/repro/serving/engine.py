@@ -17,17 +17,18 @@ engines run as fast as the hardware allows):
     capacity — see models.modeling.forward_seq); suffix-only
     (prefix-reuse) prefills additionally bucket the PREFIX KV length,
     so warm admissions share one program per (prefix bucket, suffix
-    bucket) pair. ``REPRO_PREFILL=exact`` (one-release escape hatch,
-    mirroring ``REPRO_DECODE=eager``) restores exact-length grouping;
+    bucket) pair. ``REPRO_PREFILL=exact`` (one-release escape hatch)
+    restores exact-length grouping;
   * the decode iteration is ONE jitted, buffer-donated device program
     (``models.modeling.decode_step_jit``) over fixed-shape slot state —
     padded (max_slots,) token/position/mask arrays, a power-of-two
     bucketed block table, and block-stacked mamba/cross slot buffers —
     with exactly one device->host transfer per step (the argmax) and no
     per-layer pool copies (the paged pool is donated into the step).
-    ``REPRO_DECODE=eager`` (or ``fused=False``) keeps the legacy eager
-    per-layer loop as the benchmark baseline; both paths are
-    token-identical by test.
+    ``fused=False`` (constructor arg) keeps the legacy eager per-layer
+    loop as the measured benchmark baseline; both paths are
+    token-identical by test. (The ``REPRO_DECODE=eager`` env hatch was
+    retired after the fused path survived three releases as default.)
 """
 from __future__ import annotations
 
@@ -139,8 +140,8 @@ class PrefillEngine:
         self._layer_fractions: Tuple[float, ...] = tuple(
             (bk * period + sb + 1) / total for bk, sb in self._attn_order)
         if bucket_prefill is None:
-            # one-release escape hatch mirroring REPRO_DECODE=eager
-            # (legacy REPRO_PREFILL_BUCKET=0 still honored)
+            # one-release escape hatch (legacy REPRO_PREFILL_BUCKET=0
+            # still honored)
             bucket_prefill = (
                 os.environ.get("REPRO_PREFILL", "bucket") != "exact"
                 and os.environ.get("REPRO_PREFILL_BUCKET", "1") != "0")
@@ -550,10 +551,9 @@ class DecodeEngine:
     zero per-layer pool copies. Retraces happen only when the block
     table grows past its bucket (bounded by log2(pool blocks)).
 
-    ``fused=False`` (or env ``REPRO_DECODE=eager``) keeps the eager
-    per-layer loop: one dispatch per sublayer, a whole-pool copy per
-    attention layer, a host sync per step — the measured baseline in
-    benchmarks/bench_decode.py.
+    ``fused=False`` keeps the eager per-layer loop: one dispatch per
+    sublayer, a whole-pool copy per attention layer, a host sync per
+    step — the measured baseline in benchmarks/bench_decode.py.
     """
 
     def __init__(self, cfg: ModelConfig, params: Tree, pool: PagedKVPool,
@@ -562,9 +562,7 @@ class DecodeEngine:
         self.params = params
         self.pool = pool
         self.max_slots = max_slots
-        if fused is None:
-            fused = os.environ.get("REPRO_DECODE", "fused") != "eager"
-        self.fused = bool(fused)
+        self.fused = True if fused is None else bool(fused)
         self._attn_order = _attn_layer_order(cfg)
         self._mamba_order = _mamba_layer_order(cfg)
         # slot state: host mirrors (admission bookkeeping) ...

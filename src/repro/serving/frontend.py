@@ -18,12 +18,25 @@ rejection forwarding across groups when the home group is saturated
 (§3.5 fallback), else the request waits at the gateway.
 ServeGroup.prefix_stats() aggregates hit-rate / reused-token counters.
 
+The serving core is TICKLESS: the TransferScheduler's virtual-time
+event queue is the spine of the group. Request arrivals, prefill-batch
+completions, per-layer KV segment landings, decode steps, drained role
+flips and prefix-cache evictions are all timestamped events drained in
+nondecreasing virtual time (ClusterFrontend.serve merges every group's
+frontier plus the gateway arrival queue onto one shared timeline), so
+TTFT/TPOT are ledgered in virtual SECONDS — the goodput currency of the
+open-loop benchmarks — not in synchronous tick counts. The staged
+``tick()`` survives only as a compatibility shim that pumps the same
+event handlers in the legacy stage order (prefill -> transfer -> pump
+-> decode) to the current deadline; both paths are token-identical
+(greedy decode is scheduling-order-invariant, pinned by test).
+
 KV hand-off runs through the overlapped layer-wise transfer pipeline by
 default (serving/transfer_sched.py, §3.6 Fig. 10): prefill streams
 per-layer KV into the scheduler, decode admission fires when the last
 segment lands, and per-group transfer_stats() ledgers admission waits,
 retries and failover requeues. ``overlap_transfer=False`` restores the
-blocking in-tick transfer.
+blocking transfer (charged on the same event timeline).
 
 A RatioAdjuster performs runtime P/D ratio adjustment per group: it
 compares the deployed ratio against the Eq.1 optimum
@@ -38,6 +51,7 @@ reconstruction (core.group), but on real engines.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 import time
 import zlib
@@ -52,7 +66,8 @@ from repro.models.config import ModelConfig
 from repro.models.params import init_params
 from repro.serving.cluster import DecodeNode, PrefillNode, ServeRequest
 from repro.serving.engine import prefill_compile_count
-from repro.serving.transfer_sched import TransferJob, TransferScheduler
+from repro.serving.transfer_sched import (TransferJob, TransferScheduler,
+                                          state_payload_nbytes)
 
 
 def _mean(xs: Sequence[float]) -> float:
@@ -60,14 +75,38 @@ def _mean(xs: Sequence[float]) -> float:
 
 
 def _median(xs: Sequence[float]) -> float:
+    """True median: even-length windows average the two middle samples
+    (the upper-middle shortcut biased Eq.1 inputs and the *_median_s
+    telemetry high)."""
     if not xs:
         return 0.0
     s = sorted(xs)
-    return s[len(s) // 2]
+    n = len(s)
+    if n % 2:
+        return s[n // 2]
+    return 0.5 * (s[n // 2 - 1] + s[n // 2])
 
 
 class ServeGroup:
-    """One scenario-bound P/D group on real engines (paper §3.2-3.3)."""
+    """One scenario-bound P/D group on real engines (paper §3.2-3.3).
+
+    Internally event-driven: ``self.events`` is a (t, seq, kind, node)
+    min-heap sharing one virtual timeline with the TransferScheduler's
+    link events. Event kinds:
+
+      * ``batch``   — a prefill node runs its formed batch (charging its
+                      MEASURED wall time as virtual seconds);
+      * ``xfer``    — hand prefilled requests to decode (begin pipelined
+                      transfer, or pay the blocking stall inline);
+      * ``step``    — one continuous-batching decode iteration
+                      (self-rescheduling while the node has requests);
+      * ``segment`` — a per-layer KV stripe (or trailing state payload)
+                      landed on a link (drained via scheduler pump);
+      * ``pump``    — bare scheduler retry point (waiting_dst jobs);
+      * ``evict``   — a prefix-cache block eviction (observability).
+
+    ``event_log`` records drained events as (t, kind), nondecreasing in
+    t while the tickless loop drives the group (property-tested)."""
 
     def __init__(self, gid: str, scenario: str, cfg: ModelConfig, params,
                  meta: MetaStore, xfer: KVTransferEngine, *,
@@ -86,7 +125,7 @@ class ServeGroup:
         self.transfer_mode = transfer_mode
         # overlapped layer-wise transfer pipeline (Fig. 10): decode
         # admission is event-driven (fires when the last layer lands)
-        # instead of blocking inside the tick's transfer stage
+        # instead of blocking inside the transfer hand-off
         self.overlap_transfer = bool(overlap_transfer)
         self.sched: Optional[TransferScheduler] = TransferScheduler(
             xfer.link, seed=zlib.crc32(gid.encode()) & 0xFFFF,
@@ -94,6 +133,7 @@ class ServeGroup:
         self.vclock = 0.0                          # virtual seconds
         self.blocking_waits: List[float] = []      # sync-mode D2D stalls
         self.n_blocking_admits = 0                 # monotonic (list trims)
+        self._blk_free_t = 0.0                     # blocking-mode link busy
         self.prefill_kwargs = dict(prefill_kwargs or {})
         self.decode_kwargs = dict(decode_kwargs or {})
         self._prefix = f"{gid}/" if iid_prefix is None else iid_prefix
@@ -104,17 +144,25 @@ class ServeGroup:
             self._new_prefill(0.0) for _ in range(n_prefill)]
         self.decodes: List[DecodeNode] = [
             self._new_decode(0.0) for _ in range(n_decode)]
-        self.rejections = 0
+        self.rejections = 0            # requests no node would take (§3.5)
+        self.probe_rejections = 0      # per-node placement probes that failed
         self.n_accepted = 0
         self.accepted: List[int] = []              # recent rids admitted
-        # (tick, old_iid, new_iid, "P->D" | "D->P")
-        self.flips: List[Tuple[int, str, str, str]] = []
+        # (t, old_iid, new_iid, "P->D" | "D->P"); t is the tick number
+        # under the staged shim, virtual seconds under the event loop
+        self.flips: List[Tuple[float, str, str, str]] = []
         # observed stats feeding the ratio adjuster; consumers only read
-        # bounded tails, so tick() trims these to a recent window
+        # bounded tails, so the event handlers trim these to a window
         self.prefill_batch_s: List[float] = []     # wall time per batch
         self.decode_step_s: List[float] = []       # wall time per step
         self.gen_tokens: List[int] = []            # admitted target lengths
-        self.ttft_ticks: List[int] = []            # submit -> first token
+        self.ttft_s: List[float] = []              # submit -> first token
+        # ------------------------------------------------- event core
+        self.events: List[Tuple[float, int, str, object]] = []
+        self._eseq = itertools.count()
+        self.event_log: List[Tuple[float, str]] = []
+        self._tickless = False         # True while ClusterFrontend.serve
+        self.on_capacity = None        # gateway hook: capacity may have freed
 
     # ------------------------------------------------- node construction
     def _new_prefill(self, t: float) -> PrefillNode:
@@ -136,8 +184,23 @@ class ServeGroup:
     def ratio(self) -> Tuple[int, int]:
         return len(self.prefills), len(self.decodes)
 
+    def load(self) -> int:
+        """Requests currently anywhere in this group's pipeline (forming
+        or prefilled-but-unhanded, in-flight transfer, decoding) — the
+        gateway's least-loaded fallback signal for unknown scenarios."""
+        n = sum(len(p.forming) + len(p.waiting) for p in self.prefills)
+        n += sum(len(d.requests) for d in self.decodes)
+        if self.sched is not None:
+            n += len(self.sched.jobs) + len(self.sched.waiting)
+        return n
+
     # ------------------------------- ingress (on-demand rejection, §3.5)
-    def offer(self, req: ServeRequest) -> bool:
+    def offer(self, req: ServeRequest, t: Optional[float] = None) -> bool:
+        """Place ``req`` on a prefill node. ONE rejection is counted per
+        request no node accepts (per-node probe failures are ledgered
+        separately — the old per-probe count inflated §3.5 forwarding
+        stats by up to n_prefill x). In event mode (``t`` given) a batch
+        event is scheduled for the accepting node."""
         # prefix affinity first (a node holding the request's prefix
         # KVCache hot serves it suffix-only), then least SSE connections
         for p in sorted(self.prefills,
@@ -148,8 +211,11 @@ class ServeGroup:
             if p.offer(req):
                 self.accepted.append(req.rid)
                 self.n_accepted += 1
+                if t is not None:
+                    self._schedule_batch(p, max(t, p.busy_until))
                 return True
-            self.rejections += 1
+            self.probe_rejections += 1
+        self.rejections += 1
         return False
 
     # ------------------------------------- transfer-pipeline callbacks
@@ -180,84 +246,245 @@ class ServeGroup:
     def _on_admit(self, job: TransferJob):
         job.dst.finish_admit(job.req, job.out)
         self.gen_tokens.append(job.req.max_new_tokens)
+        if self._tickless:
+            self._schedule_step(job.dst,
+                                max(job.admitted_t, job.dst.busy_until))
 
-    # --------------------------------------------------- per-tick stages
-    def tick(self, tick_no: int):
-        vt_tick_start = self.vclock
-        # prefill batches (observed TTFT + batch-latency stats); in
-        # overlapped mode the engine streams per-layer KV into the
-        # node's stage area and the batch start/duration is recorded so
-        # segment ready-times land UNDER the compute window
-        for p in self.prefills:
-            if not p.forming:
-                continue
-            batch_rids = [r.rid for r in p.forming]
-            t0v = self.vclock
-            t0 = time.perf_counter()
-            ready = p.run_batch(collect_layers=self.overlap_transfer)
-            w = time.perf_counter() - t0
-            self.prefill_batch_s.append(w)
-            self.vclock += w
-            if self.sched is not None:       # only consumer of the meta
-                for rid in batch_rids:
-                    p.batch_meta[rid] = (t0v, w)
-            for req, _ in ready:
-                if req.submit_tick >= 0:
-                    self.ttft_ticks.append(tick_no - req.submit_tick)
-        # transfer to decode (least-loaded decode with spare capacity)
-        for p in self.prefills:
-            remaining = []
-            for req, out in p.waiting:
-                tgt = self._pick_decode()
-                if tgt is None:
-                    remaining.append((req, out))
-                    continue
-                if self.sched is not None:
-                    t0v, w = p.batch_meta.pop(req.rid, (self.vclock, 0.0))
-                    self.sched.begin(
-                        req, out, src_iid=p.iid, dst=tgt, t_start=t0v,
-                        compute_s=w, payloads=p.staged.pop(req.rid, None),
-                        fracs=p.engine.layer_fractions() or None,
-                        on_admit=self._on_admit)
-                    p.pool.release(req.rid)
-                else:
-                    tgt.admit(req, out, p.pool, self.xfer,
-                              mode=self.transfer_mode)
-                    stall = self.xfer.stats[-1].time_s if out.k is not None \
-                        else 0.0
-                    self.blocking_waits.append(stall)
-                    self.n_blocking_admits += 1
-                    self.vclock += stall
-                    self.gen_tokens.append(req.max_new_tokens)
-                p.sse_connections -= 1
-            p.waiting = remaining
-        # pump the pipeline: completed last layers fire decode admission
-        if self.sched is not None:
-            self.sched.pump(self.vclock)
-        # decode iteration
-        for d in self.decodes:
-            if not d.requests:
-                continue
-            t0 = time.perf_counter()
-            d.step()
-            w = time.perf_counter() - t0
-            self.decode_step_s.append(w)
-            self.vclock += w
-        # event-driven progress guarantee: if transfers are still in
-        # flight but nothing advanced the virtual clock this tick (group
-        # otherwise idle), jump to the next link event instead of
-        # spinning ticks
+    # ------------------------------------------------------- event core
+    def schedule(self, t: float, kind: str, obj: object = None):
+        heapq.heappush(self.events, (t, next(self._eseq), kind, obj))
+
+    def _schedule_batch(self, p: PrefillNode, t: float):
+        if p._batch_evt:
+            return
+        p._batch_evt = True
+        self.schedule(t, "batch", p)
+
+    def _schedule_step(self, d: DecodeNode, t: float):
+        if d._step_evt:
+            return
+        d._step_evt = True
+        self.schedule(t, "step", d)
+
+    def next_time(self) -> Optional[float]:
+        """Earliest pending event on this group's timeline (queued group
+        events and transfer-link landings)."""
+        t = self.events[0][0] if self.events else None
         if self.sched is not None and not self.sched.idle():
-            self.sched.pump(self.vclock)
-            nxt = self.sched.next_event()
-            if nxt is not None and self.vclock <= vt_tick_start:
-                self.vclock = max(self.vclock, nxt)
-                self.sched.pump(self.vclock)
+            ts = self.sched.next_event()
+            if ts is not None and (t is None or ts < t):
+                t = ts
+        return t
+
+    def advance(self, until: float):
+        """Drain group events and link-segment landings in global
+        nondecreasing virtual-time order, up to and including ``until``.
+        This is the tickless hot loop; the staged shim reuses the same
+        handlers through _drain_queued."""
+        for _ in range(1_000_000):
+            t_ev = self.events[0][0] if self.events else None
+            t_sc = None
+            if self.sched is not None and not self.sched.idle():
+                t_sc = self.sched.next_event()
+            if t_sc is not None and t_sc <= until \
+                    and (t_ev is None or t_sc <= t_ev):
+                self.vclock = max(self.vclock, t_sc)
+                self.event_log.append((t_sc, "segment"))
+                self.sched.pump(t_sc)
+            elif t_ev is not None and t_ev <= until:
+                t, _, kind, obj = heapq.heappop(self.events)
+                if self.sched is not None:
+                    self.sched.pump(t)
+                self.vclock = max(self.vclock, t)
+                self.event_log.append((t, kind))
+                self._dispatch(kind, t, obj)
+            else:
+                return
+        raise RuntimeError(f"event loop runaway in group {self.gid}")
+
+    def _drain_queued(self):
+        """Pop every queued group event in time order (staged shim:
+        events never outrun the handlers that scheduled them), pumping
+        the transfer scheduler in lockstep so segment landings and
+        admissions interleave at their true times."""
+        while self.events:
+            t, _, kind, obj = heapq.heappop(self.events)
+            if self.sched is not None:
+                self.sched.pump(t)
+            self.vclock = max(self.vclock, t)
+            self.event_log.append((t, kind))
+            self._dispatch(kind, t, obj)
+
+    def _dispatch(self, kind: str, t: float, obj: object):
+        if kind == "batch":
+            self._ev_batch(t, obj)
+        elif kind == "xfer":
+            self._ev_xfer(t, obj)
+        elif kind == "step":
+            self._ev_step(t, obj)
+        # "pump": the pre-dispatch pump already retried waiting jobs;
+        # "evict"/"segment" are ledger-only kinds
+
+    # ------------------------------------------------------- handlers
+    def _ev_batch(self, t: float, p: PrefillNode):
+        """Run a prefill node's formed batch at virtual time ``t``; the
+        node is busy until t + measured wall seconds, TTFT ends (first
+        token streams) at batch completion, and the transfer hand-off is
+        scheduled there."""
+        p._batch_evt = False
+        if not p.forming:
+            return
+        if p.busy_until > t + 1e-12:       # mid-batch: wait for the node
+            self._schedule_batch(p, p.busy_until)
+            return
+        batch_rids = [r.rid for r in p.forming]
+        t0 = time.perf_counter()
+        ready = p.run_batch(collect_layers=self.overlap_transfer)
+        w = time.perf_counter() - t0
+        self.prefill_batch_s.append(w)
+        done = t + w
+        p.busy_until = done
+        self.vclock = max(self.vclock, done)
+        if self.sched is not None:       # only consumer of the meta
+            for rid in batch_rids:
+                p.batch_meta[rid] = (t, w)
+        for req, _ in ready:
+            req.first_token_t = done
+            if req.submit_t >= 0.0:
+                self.ttft_s.append(max(0.0, done - req.submit_t))
+        self._note_evictions(p, t)
+        # overlapped: the engine streams layers DURING the compute
+        # window, so the hand-off (scheduler begin) is stamped at batch
+        # start and segments land under the window (Fig. 10); blocking
+        # transfer can only move the final KV at batch completion
+        self.schedule(t if self.sched is not None else done, "xfer", p)
+        if self.on_capacity is not None:   # forming slots freed
+            self.on_capacity(done)
+        self._trim_hists()
+
+    def _ev_xfer(self, t: float, p: PrefillNode):
+        """Hand prefilled requests to decode: pipelined transfer begin
+        (overlapped) or inline blocking admission charging the D2D stall
+        — including the recurrent-state payload of attn-free/SSM
+        requests, whose ``out.k is None`` previously ledgered a free
+        transfer."""
+        if not p.waiting:
+            return
+        remaining = []
+        moved = False
+        for req, out in p.waiting:
+            tgt = self._pick_decode()
+            if tgt is None:
+                remaining.append((req, out))
+                continue
+            if self.sched is not None:
+                t0v, w = p.batch_meta.pop(req.rid, (t, 0.0))
+                self.sched.begin(
+                    req, out, src_iid=p.iid, dst=tgt, t_start=t0v,
+                    compute_s=w, payloads=p.staged.pop(req.rid, None),
+                    fracs=p.engine.layer_fractions() or None,
+                    on_admit=self._on_admit)
+                p.pool.release(req.rid)
+            else:
+                tgt.admit(req, out, p.pool, self.xfer,
+                          mode=self.transfer_mode)
+                stall = self.xfer.stats[-1].time_s if out.k is not None \
+                    else 0.0
+                state_b = state_payload_nbytes(out)
+                if state_b:
+                    # the mamba state / cross KV crosses the same link:
+                    # state-only payloads pay wire time too
+                    stall += self.xfer.link.time(state_b, 1)
+                self.blocking_waits.append(stall)
+                self.n_blocking_admits += 1
+                start = max(t, self._blk_free_t)
+                admitted = start + stall
+                self._blk_free_t = admitted
+                self.vclock = max(self.vclock, admitted)
+                self.gen_tokens.append(req.max_new_tokens)
+                if self._tickless:
+                    self._schedule_step(tgt, max(admitted, tgt.busy_until))
+            p.sse_connections -= 1
+            moved = True
+        p.waiting = remaining
+        if moved and self.on_capacity is not None:
+            self.on_capacity(t)
+
+    def _ev_step(self, t: float, d: DecodeNode):
+        """One decode iteration at virtual time ``t``; in tickless mode
+        the node self-reschedules while it has requests, and completions
+        retry the transfer hand-off (freed slots) at once."""
+        d._step_evt = False
+        if not d.requests:
+            return
+        if d.busy_until > t + 1e-12:
+            self._schedule_step(d, d.busy_until)
+            return
+        t0 = time.perf_counter()
+        finished = d.step()
+        w = time.perf_counter() - t0
+        self.decode_step_s.append(w)
+        done = t + w
+        d.busy_until = done
+        self.vclock = max(self.vclock, done)
+        for req in finished:
+            req.finish_t = done
+        if self._tickless:
+            if d.requests:
+                self._schedule_step(d, done)
+            if finished:
+                for p in self.prefills:
+                    if p.waiting:
+                        self.schedule(done, "xfer", p)
+                if self.sched is not None and not self.sched.idle():
+                    self.schedule(done, "pump", None)
+        self._trim_hists()
+
+    def _note_evictions(self, p: PrefillNode, t: float):
+        new = p.pool.evictions - p._evictions_seen
+        p._evictions_seen = p.pool.evictions
+        for _ in range(int(new)):
+            self.event_log.append((t, "evict"))
+
+    def _trim_hists(self):
         for hist in (self.prefill_batch_s, self.decode_step_s,
-                     self.gen_tokens, self.ttft_ticks, self.accepted,
+                     self.gen_tokens, self.ttft_s, self.accepted,
                      self.blocking_waits):
             if len(hist) > 512:
                 del hist[:-256]
+        if len(self.event_log) > 4096:
+            del self.event_log[:-2048]
+
+    # ------------------------------------------ staged compatibility shim
+    def tick(self, tick_no: int):
+        """Legacy staged step, now a shim over the event core: enqueue
+        batch/transfer events at the current frontier, drain them (with
+        the scheduler pumped in lockstep), take ONE decode iteration per
+        busy node, then — replacing the old spinning-ticks hack — jump
+        the frontier to the next pending event if nothing advanced."""
+        self._tickless = False
+        vt0 = self.vclock
+        for p in self.prefills:
+            if p.forming:
+                self._schedule_batch(p, max(self.vclock, p.busy_until))
+            elif p.waiting:
+                self.schedule(self.vclock, "xfer", p)
+        self._drain_queued()
+        # completed last layers fire decode admission
+        if self.sched is not None:
+            self.sched.pump(self.vclock)
+        for d in self.decodes:
+            if d.requests:
+                self.event_log.append((self.vclock, "step"))
+                self._ev_step(self.vclock, d)
+        # event-frontier progress guarantee: transfers still in flight
+        # with the group otherwise idle advance to the next link event
+        # instead of spinning ticks
+        if self.vclock <= vt0:
+            nxt = self.next_time()
+            if nxt is not None:
+                self.advance(nxt)
+        self._trim_hists()
         self._complete_flips(tick_no)
 
     # --------------------------------- runtime role flips (§3.3 on real)
@@ -284,25 +511,41 @@ class ServeGroup:
         node.draining = True
         return node.iid
 
-    def _complete_flips(self, tick_no: int):
-        t = float(tick_no)
+    def _complete_flips(self, t: float):
+        """``t``: tick number under the staged shim, virtual seconds in
+        event mode (flip completion is itself a timestamped event)."""
+        tf = float(t)
+        flipped = False
         for p in [x for x in self.prefills if x.draining]:
             if p.forming or p.waiting:
                 continue   # in-flight prefill work must complete first
             self.prefills.remove(p)
-            self.meta.remove_instance(t, p.iid)
-            d = self._new_decode(t)
-            self.flips.append((tick_no, p.iid, d.iid, "P->D"))
+            self.meta.remove_instance(tf, p.iid)
+            d = self._new_decode(tf)
+            self.flips.append((t, p.iid, d.iid, "P->D"))
             self.decodes.append(d)
+            flipped = True
         for d in [x for x in self.decodes if x.draining]:
             if d.requests or (self.sched is not None
                               and self.sched.pending_for(d.iid)):
                 continue   # in-flight decodes/transfers must clear first
             self.decodes.remove(d)
-            self.meta.remove_instance(t, d.iid)
-            p = self._new_prefill(t)
-            self.flips.append((tick_no, d.iid, p.iid, "D->P"))
+            self.meta.remove_instance(tf, d.iid)
+            p = self._new_prefill(tf)
+            self.flips.append((t, d.iid, p.iid, "D->P"))
             self.prefills.append(p)
+            flipped = True
+        if flipped:
+            self.event_log.append((tf, "flip"))
+            if self._tickless:
+                # fresh capacity: retry queued hand-offs and stranded jobs
+                for p in self.prefills:
+                    if p.waiting:
+                        self.schedule(tf, "xfer", p)
+                if self.sched is not None and not self.sched.idle():
+                    self.schedule(tf, "pump", None)
+            if self.on_capacity is not None:
+                self.on_capacity(tf)
 
     # ------------------------------------------------------------- stats
     def observed_profile(self, *, min_samples: int = 3
@@ -343,7 +586,7 @@ class ServeGroup:
 
     def recent_admission_waits(self, n: int = 64) -> List[float]:
         """Tail of per-request admission waits (overlapped: scheduler
-        ledger; blocking: in-tick D2D stalls) — the RatioAdjuster's
+        ledger; blocking: D2D stalls) — the RatioAdjuster's
         decode-pressure signal."""
         if self.sched is not None:
             return list(self.sched.admission_waits[-n:])
@@ -352,8 +595,8 @@ class ServeGroup:
     def transfer_stats(self) -> Dict[str, float]:
         """Per-group D2D pipeline stats: overlapped mode reports the
         scheduler's virtual-time ledger, blocking mode the synchronous
-        stalls paid inside the tick's critical section. Both carry the
-        group's MEASURED engine wall times (the same numbers the vclock
+        stalls paid at the hand-off event. Both carry the group's
+        MEASURED engine wall times (the same numbers the vclock
         charges), so the overlap pipeline's ready/busy arithmetic tracks
         the fused engines' real speed rather than a profiled guess.
 
@@ -400,8 +643,9 @@ class ServeGroup:
             "n_p": n_p, "n_d": n_d,
             "accepted": self.n_accepted,
             "rejections": self.rejections,
+            "probe_rejections": self.probe_rejections,
             "flips": len(self.flips),
-            "ttft_ticks_mean": _mean(self.ttft_ticks),
+            "ttft_s_mean": _mean(self.ttft_s),
             "prefix_hit_rate": pf["hit_rate"],
             "reused_tokens": pf["reused_tokens"],
             "transfer_overlapped": tf["overlapped"],
@@ -413,14 +657,17 @@ class ServeGroup:
 class RatioAdjuster:
     """Runtime P/D ratio adjustment for one ServeGroup (§3.3, Fig. 12).
 
-    Every `interval` ticks: compute the Eq.1 optimum for the group's
-    current node count from `profile` (profiled in advance) or from the
-    group's observed timings, and flip ONE node toward it. When no
-    profile is available yet, fall back to pure queue/TTFT pressure:
+    Every `interval` adjust steps: compute the Eq.1 optimum for the
+    group's current node count from `profile` (profiled in advance) or
+    from the group's observed timings, and flip ONE node toward it. When
+    no profile is available yet, fall back to pure queue/TTFT pressure:
     gateway backlog + busy prefills + an idle decode means the prefill
     side is the bottleneck, and vice versa. A flip fires only after two
-    consecutive adjust ticks agree on the direction (hysteresis: noisy
+    consecutive adjust steps agree on the direction (hysteresis: noisy
     observed timings near the optimum must not ping-pong a node).
+    Under the staged shim the adjust step IS the tick; the tickless
+    frontend fires adjust steps every ``adjust_period_s`` virtual
+    seconds instead.
 
     The per-group transfer pipeline's ADMISSION-WAIT ledger
     (ServeGroup.recent_admission_waits) weighs in alongside Eq.1 and the
@@ -428,7 +675,7 @@ class RatioAdjuster:
     starvation the TTFT-side signals cannot see, so a spike (recent
     waits >= wait_spike x the earlier window) votes P->D. An
     agreeing-or-unopposed vote shifts the suggestion; a vote that
-    contradicts Eq.1 cancels the tick, and after a wait-driven flip the
+    contradicts Eq.1 cancels the step, and after a wait-driven flip the
     opposite (D->P) correction is suppressed for ``wait_cooldown``
     adjust intervals — the relieved spike would otherwise expire
     immediately and Eq.1 would revert the flip every cycle, paying two
@@ -528,7 +775,7 @@ class RatioAdjuster:
 
     def _pressure_signal(self, backlog: int) -> Optional[str]:
         g = self.group
-        tt = g.ttft_ticks
+        tt = g.ttft_s
         ttft_rising = (len(tt) >= 16
                        and _mean(tt[-8:]) > 1.5 * _mean(tt[-16:-8]))
         prefill_busy = all(p.draining or not p.idle() for p in g.prefills)
@@ -545,12 +792,20 @@ class RatioAdjuster:
 
 
 class ClusterFrontend:
-    """Gateway over N scenario groups, stepped synchronously (§3.2, §3.5).
+    """Gateway over N scenario groups on one shared virtual timeline
+    (§3.2, §3.5).
 
     topology maps scenario tag -> (n_prefill, n_decode); groups are
     named g0, g1, ... in topology order. Requests route to their
-    scenario's group first and fall back across groups only when the
-    home group rejects them everywhere."""
+    scenario's group first (unknown scenarios fall back to the
+    least-loaded group) and forward across groups only when the home
+    group rejects them everywhere.
+
+    ``tickless=True`` (default): run() / serve() drain gateway arrivals
+    and every group's event frontier in global virtual-time order —
+    open-loop arrival schedules submit with ``submit(req, at=t)``.
+    ``tickless=False`` restores the legacy synchronous tick loop (the
+    per-group staged shim); both are token-identical by test."""
 
     def __init__(self, cfg: ModelConfig, *,
                  topology: Optional[Dict[str, Tuple[int, int]]] = None,
@@ -563,7 +818,9 @@ class ClusterFrontend:
                  prefill_kwargs: Optional[dict] = None,
                  decode_kwargs: Optional[dict] = None,
                  prefix_cache: bool = True,
-                 overlap_transfer: bool = True):
+                 overlap_transfer: bool = True,
+                 tickless: bool = True,
+                 adjust_period_s: float = 0.25):
         topology = topology or {"default": (1, 1)}
         prefill_kwargs = dict(prefill_kwargs or {})
         prefill_kwargs.setdefault("prefix_cache", prefix_cache)
@@ -577,6 +834,7 @@ class ClusterFrontend:
         self.meta = MetaStore()
         self.xfer = KVTransferEngine(link or LinkModel(), seed=seed)
         self.transfer_mode = transfer_mode
+        self.tickless = bool(tickless)
         self.groups: Dict[str, ServeGroup] = {}
         self.adjusters: Dict[str, RatioAdjuster] = {}
         profiles = profiles or {}
@@ -587,6 +845,7 @@ class ClusterFrontend:
                 overlap_transfer=overlap_transfer,
                 iid_prefix="" if flat_iids else None,
                 prefill_kwargs=prefill_kwargs, decode_kwargs=decode_kwargs)
+            g.on_capacity = self._note_capacity
             self.groups[scenario] = g
             if adjust_ratio:
                 self.adjusters[scenario] = RatioAdjuster(
@@ -594,6 +853,14 @@ class ClusterFrontend:
                     profile=profiles.get(scenario))
         self.pending: List[ServeRequest] = []
         self.tick_no = 0
+        # ------------------------------------------ shared event timeline
+        self.now = 0.0                      # gateway virtual-time frontier
+        self.arrivals: List[Tuple[float, int, ServeRequest]] = []
+        self._aseq = itertools.count()
+        self._retry = False                 # capacity freed since last try
+        self.adjust_period_s = float(adjust_period_s)
+        self._next_adjust = self.adjust_period_s
+        self._adjust_k = 0                  # synthetic adjust-step counter
 
     @property
     def rejections(self) -> int:
@@ -601,29 +868,119 @@ class ClusterFrontend:
 
     def group_for(self, req: ServeRequest) -> ServeGroup:
         sc = getattr(req, "scenario", "default")
-        if sc in self.groups:
-            return self.groups[sc]
-        return next(iter(self.groups.values()))
+        g = self.groups.get(sc)
+        if g is not None:
+            return g
+        # unknown scenario: least-loaded group (a burst must not pile
+        # onto g0 while other groups idle)
+        return min(self.groups.values(), key=lambda x: (x.load(), x.gid))
 
     # ---------------------------------------------------------- ingress
-    def submit(self, req: ServeRequest):
-        req.submit_tick = self.tick_no
+    def submit(self, req: ServeRequest, *, at: Optional[float] = None):
+        """Hand a request to the gateway. ``at`` (virtual seconds)
+        enqueues a timed open-loop arrival on the event timeline;
+        without it the request arrives "now" (the legacy synchronous
+        path stamps the home group's frontier)."""
+        if at is not None:
+            req.submit_t = at
+            heapq.heappush(self.arrivals, (at, next(self._aseq), req))
+            return
+        req.submit_t = self.now if self.tickless \
+            else self.group_for(req).vclock
         self.pending.append(req)
 
-    # ------------------------------------------------------------- tick
+    def _try_place(self, req: ServeRequest, t: Optional[float]) -> bool:
+        """On-demand forwarding within the home group, then cross-group
+        fallback (§3.5)."""
+        home = self.group_for(req)
+        if home.offer(req, t=t):
+            return True
+        for g in self.groups.values():
+            if g is not home and g.offer(req, t=t):
+                return True
+        return False
+
+    def _note_capacity(self, t: float):
+        self._retry = True
+
+    def _retry_pending(self):
+        self._retry = False
+        still: List[ServeRequest] = []
+        for req in self.pending:
+            if not self._try_place(req, self.now):
+                still.append(req)
+        self.pending = still
+
+    # ------------------------------------------------- tickless event loop
+    def serve(self, *, deadline: Optional[float] = None,
+              watch: Optional[Sequence[ServeRequest]] = None,
+              max_events: int = 1_000_000):
+        """Drain the shared timeline — gateway arrivals, per-group
+        batch/transfer/decode events and link-segment landings — in
+        global nondecreasing virtual time. Stops at ``deadline`` (virtual
+        seconds), when ``watch`` requests are all done, or when the
+        timeline is empty."""
+        for g in self.groups.values():
+            g._tickless = True
+        try:
+            if self.pending:
+                self._retry_pending()
+            for _ in range(max_events):
+                t_arr = self.arrivals[0][0] if self.arrivals else None
+                t_grp, g_next = None, None
+                for g in self.groups.values():
+                    tg = g.next_time()
+                    if tg is not None and (t_grp is None or tg < t_grp):
+                        t_grp, g_next = tg, g
+                if t_arr is None and t_grp is None:
+                    break
+                if t_arr is not None and (t_grp is None or t_arr <= t_grp):
+                    if deadline is not None and t_arr > deadline:
+                        break
+                    _, _, req = heapq.heappop(self.arrivals)
+                    self.now = max(self.now, t_arr)
+                    if not self._try_place(req, t_arr):
+                        self.pending.append(req)
+                else:
+                    if deadline is not None and t_grp > deadline:
+                        break
+                    self.now = max(self.now, t_grp)
+                    g_next.advance(t_grp)
+                    if g_next.draining_nodes():
+                        g_next._complete_flips(g_next.vclock)
+                if self._retry and self.pending:
+                    self._retry_pending()
+                if self.adjusters and self.now >= self._next_adjust:
+                    self._run_adjusters()
+                if watch is not None and all(r.done for r in watch):
+                    break
+        finally:
+            for g in self.groups.values():
+                g._tickless = False
+
+    def _run_adjusters(self):
+        """Periodic adjust step on the event timeline: every
+        ``adjust_period_s`` virtual seconds, with a synthetic step
+        counter in multiples of each adjuster's interval so the
+        tick-modulo contract (and its hysteresis/cooldown arithmetic)
+        carries over unchanged."""
+        self._adjust_k += 1
+        backlog: Dict[str, int] = {}
+        for req in self.pending:
+            sc = self.group_for(req).scenario
+            backlog[sc] = backlog.get(sc, 0) + 1
+        for sc, adj in self.adjusters.items():
+            adj.maybe_adjust(self._adjust_k * adj.interval,
+                             backlog.get(sc, 0))
+        self._next_adjust = self.now + self.adjust_period_s
+
+    # ----------------------------------------------- staged tick (shim)
     def tick(self):
         # 1. gateway: on-demand forwarding within the home group, then
         #    cross-group fallback (§3.5); unplaced requests wait here
         still: List[ServeRequest] = []
         for req in self.pending:
-            home = self.group_for(req)
-            placed = home.offer(req)
-            if not placed:
-                for g in self.groups.values():
-                    if g is not home and g.offer(req):
-                        placed = True
-                        break
-            if not placed:
+            if not self._try_place(req, None):
                 still.append(req)
         self.pending = still
         # 2-4. per-group prefill / transfer / decode (+ drained flips)
@@ -636,9 +993,16 @@ class ClusterFrontend:
         for sc, adj in self.adjusters.items():
             adj.maybe_adjust(self.tick_no, backlog.get(sc, 0))
         self.tick_no += 1
+        self.now = max([self.now]
+                       + [g.vclock for g in self.groups.values()])
 
     def run(self, requests: Sequence[ServeRequest], *,
             max_ticks: int = 200) -> List[ServeRequest]:
+        if self.tickless:
+            for r in requests:
+                self.submit(r, at=self.now)
+            self.serve(watch=list(requests))
+            return list(requests)
         for r in requests:
             self.submit(r)
         for _ in range(max_ticks):

@@ -31,6 +31,12 @@ movement between paged pools so delivery is bit-exact testable:
   * an uncontended single job reports exactly
     ``LinkModel.per_layer_completion`` — the shared overlap model the
     discrete-event simulator uses (pinned by tests/test_transfer.py).
+
+Since PR 7 this virtual clock is the spine of the whole serving loop:
+``ServeGroup`` drains its own event heap (batches, hand-offs, decode
+steps, flips, evictions) in lockstep with ``next_event()``/``pump()``
+here, so segment landings interleave with compute events in global
+nondecreasing virtual-time order (tests/test_event_loop.py).
 """
 from __future__ import annotations
 

@@ -215,7 +215,7 @@ def test_bucketing_universal_with_exact_escape_hatch(monkeypatch):
     """Every family takes the bucketed path by default (the forward is
     pad-invariant by contract — there is no supports_bucketing gate
     anymore); REPRO_PREFILL=exact is the one-release escape hatch back
-    to exact-length grouping, mirroring REPRO_DECODE=eager."""
+    to exact-length grouping."""
     for arch in ("mamba2-2.7b", "jamba-1.5-large-398b", "qwen2-moe-a2.7b",
                  "granite-3-8b"):
         cfg, params = reduced_params(arch)
