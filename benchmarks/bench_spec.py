@@ -1,0 +1,114 @@
+"""Fused speculative decode vs plain fused greedy decode.
+
+Greedy speculation is lossless, so the interesting numbers are purely
+throughput-side: tokens emitted per jitted step (the speculation
+speedup — a perfect draft retires k+1 tokens per verification sweep)
+and the steady-state per-token latency (TPOT), spec vs plain, on the
+same engines the serving path uses. Emits ``BENCH_spec.json`` so the
+trajectory is tracked across PRs.
+
+A perfect draft (the target drafting for itself) is used so acceptance
+— and therefore the steps-per-token ratio — is deterministic; real
+deployments swap in a distilled checkpoint and land between 1x and the
+k+1 ceiling depending on draft quality.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config
+
+ARCHS = ["granite-3-8b", "mamba2-2.7b"]
+SLOTS = 4
+K = 3
+WARMUP = 3
+ITERS = 12
+OUT_JSON = os.environ.get("BENCH_SPEC_JSON", "BENCH_spec.json")
+
+
+def _engine(cfg, params, outs, prompts, *, spec):
+    from repro.serving.engine import DecodeEngine
+    from repro.serving.kvcache import PagedKVPool
+    pool = PagedKVPool(cfg, num_blocks=192, block_size=4)
+    room = (WARMUP + ITERS) * (K + 1) + 4
+    de = DecodeEngine(cfg, params, pool, max_slots=SLOTS, spec=spec)
+    for rid, out in enumerate(outs):
+        pool.alloc(rid, out.prompt_len + room)
+        if out.k is not None:
+            pool.write_prefill(
+                pool.owned(rid)[: (out.prompt_len + 3) // 4],
+                out.k, out.v)
+        de.admit(rid, out, pool.owned(rid),
+                 prompt=prompts[rid] if spec is not None else None)
+    return de
+
+
+def _steady_state(de):
+    """(step latency us, emitted tokens per step) once warm."""
+    for _ in range(WARMUP):                 # JIT warm + table bucket
+        de.step()
+    emitted = 0
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        for toks in de.step().values():
+            emitted += len(toks) if isinstance(toks, list) else 1
+    step_us = (time.perf_counter() - t0) / ITERS * 1e6
+    return step_us, emitted / ITERS
+
+
+def run() -> list:
+    import jax
+
+    from repro.models.params import init_params
+    from repro.serving.engine import PrefillEngine
+    from repro.serving.speculative import SpecConfig
+
+    rows: list[Row] = []
+    report = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(4)
+        prompts = [list(map(int, rng.integers(0, cfg.vocab_size, int(n))))
+                   for n in rng.integers(8, 14, SLOTS)]
+        outs = PrefillEngine(cfg, params).run(prompts)
+        plain_us, plain_tps = _steady_state(
+            _engine(cfg, params, outs, prompts, spec=None))
+        spec = SpecConfig(cfg, params, k=K)     # perfect draft: ceiling
+        spec_us, spec_tps = _steady_state(
+            _engine(cfg, params, outs, prompts, spec=spec))
+        # steps-per-token ratio: how many plain steps one spec step
+        # replaces (K+1 at the perfect-draft ceiling)
+        steps_ratio = (spec_tps / SLOTS) / (plain_tps / SLOTS)
+        plain_tpot = plain_us / plain_tps
+        spec_tpot = spec_us / spec_tps
+        short = arch.split("-")[0]
+        rows += [
+            (f"spec/{short}_plain_tpot_us", plain_tpot,
+             f"slots={SLOTS}"),
+            (f"spec/{short}_spec_tpot_us", spec_tpot,
+             f"k={K},x{plain_tpot / max(spec_tpot, 1e-9):.1f}_vs_plain"),
+            (f"spec/{short}_steps_per_token_x", steps_ratio,
+             f"ceiling={K + 1}"),
+        ]
+        report[arch] = {
+            "plain_step_us": plain_us,
+            "spec_step_us": spec_us,
+            "plain_tokens_per_step": plain_tps,
+            "spec_tokens_per_step": spec_tps,
+            "steps_per_token_x": steps_ratio,
+            "plain_tpot_us": plain_tpot,
+            "spec_tpot_us": spec_tpot,
+            "tpot_speedup_x": plain_tpot / max(spec_tpot, 1e-9),
+            "k": K,
+            "slots": SLOTS,
+            "iters": ITERS,
+        }
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return rows

@@ -8,7 +8,7 @@ import sys
 from benchmarks import (bench_decode, bench_e2e, bench_forwarding,
                         bench_kernels, bench_open_loop, bench_pd_ratio,
                         bench_prefill, bench_prefix_cache, bench_recovery,
-                        bench_transfer)
+                        bench_spec, bench_transfer)
 from benchmarks.common import emit
 
 ALL = {
@@ -18,6 +18,7 @@ ALL = {
     "prefix": bench_prefix_cache,     # Fig 1b, 3a
     "e2e": bench_e2e,                 # 6.7x / 60% headline
     "decode": bench_decode,           # fused vs eager decode step
+    "spec": bench_spec,               # fused speculative vs plain decode
     "prefill": bench_prefill,         # exact vs bucketed prefill compiles
     "recovery": bench_recovery,       # Fig 13b/c/d
     "kernels": bench_kernels,         # kernel microbench

@@ -142,5 +142,23 @@ def decode_slot_state(cfg: ModelConfig, max_slots: int,
     return layers
 
 
+def select_slot_state(stacked: Tree, idx: jax.Array) -> Tree:
+    """Per-slot selection out of a micro-step state stack.
+
+    ``stacked`` is a decode_slot_state tree whose every leaf grew a
+    leading micro-step axis — (k+1, nblk, max_slots, ...) — from
+    ``lax.scan`` stacking the post-state of each speculative micro-step.
+    ``idx`` (max_slots,) int32 picks, PER SLOT, which micro-step's state
+    to keep (the speculative rollback: depth ``n_emit - 1``). Pure
+    gather — no replay, no retrace: idx is data.
+    """
+    def f(x):
+        ix = idx.astype(jnp.int32).reshape(
+            (1, 1, -1) + (1,) * (x.ndim - 3))
+        ix = jnp.broadcast_to(ix, (1,) + x.shape[1:])
+        return jnp.take_along_axis(x, ix, axis=0)[0]
+    return jax.tree.map(f, stacked)
+
+
 def _is_leaf(x) -> bool:
     return isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)

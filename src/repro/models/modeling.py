@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.distribution.ctx import constrain
+from repro.models.caches import select_slot_state
 from repro.models.config import ATTN, MAMBA, ModelConfig
 from repro.models.params import block_period, num_blocks
 
@@ -1168,36 +1169,20 @@ def forward_prefill(cfg: ModelConfig, params: Tree, batch: Tree,
     return first, cache
 
 
-def forward_decode_step(cfg: ModelConfig, params: Tree, storage: jax.Array,
-                        block_tables: jax.Array, tokens: jax.Array,
-                        pos: jax.Array, active: jax.Array,
-                        slot_layers: Tree, *, block_size: int
-                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                                   jax.Array, Tree]:
-    """ONE fused decode iteration over a fixed slot set — the whole
-    per-token layer loop as a single device program (jitted by
-    ``decode_step_jit`` with the paged pool and slot buffers donated, so
-    XLA updates them in place instead of copying the pool once per
-    attention layer per token, which is what the eager loop pays).
-
-    storage:      (attn_layers|1, NB, BS, W) paged pool (K ++ V packed).
-    block_tables: (n_slots, T) int32, -1 padded; T is the engine's
-                  power-of-two table bucket (fixed shape between
-                  admissions -> no retrace in steady state).
-    tokens/pos:   (n_slots,) int32 — last emitted token / tokens so far.
-    active:       (n_slots,) bool slot mask. Inactive slots compute
-                  garbage rows (row-independent math everywhere,
-                  including per-row capacity MoE) and their pool writes
-                  are dropped via a -1 block id (scatter mode="drop").
-    slot_layers:  {"sub{i}": {...}} per-sublayer slot state stacked on a
-                  leading num_blocks axis (mamba conv/state tails,
-                  enc-dec cross KV), carried through the layer scan and
-                  updated in place at the block index.
-
-    Returns (next_token, new_tokens, new_pos, storage', slot_layers');
-    next_token is the on-device argmax — the caller's single host
-    transfer per step.
-    """
+def _decode_step_core(cfg: ModelConfig, params: Tree, storage: jax.Array,
+                      block_tables: jax.Array, tokens: jax.Array,
+                      pos: jax.Array, active: jax.Array,
+                      slot_layers: Tree, *, block_size: int,
+                      caps: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array, Tree]:
+    """One decode iteration's layer loop: (argmax token, storage',
+    slot_layers'). Shared by the plain fused step and every micro-step
+    of the speculative propose/verify program. ``caps`` (n_slots,)
+    int32, when given, additionally drops pool writes at positions past
+    a slot's owned capacity — speculative micro-steps run ``pos + j``
+    past the last admitted block, and without the guard the clip-mode
+    table lookup would redirect those writes onto the slot's LAST real
+    block instead of off the end."""
     from repro.kernels import ops
     bs = block_size
     period = block_period(cfg)
@@ -1219,7 +1204,10 @@ def forward_decode_step(cfg: ModelConfig, params: Tree, storage: jax.Array,
     # inactive slots (and -1 table pads) write past the pool so the
     # scatter's mode="drop" discards them — negative ids would WRAP
     nb = storage.shape[1]
-    tok_blk = jnp.where(active & (tok_blk >= 0), tok_blk, nb)
+    ok = active & (tok_blk >= 0)
+    if caps is not None:
+        ok = ok & (pos < caps.astype(jnp.int32))
+    tok_blk = jnp.where(ok, tok_blk, nb)
     tok_off = pos % bs
     h = params["embed"][tokens].astype(jnp.float32)
 
@@ -1278,8 +1266,44 @@ def forward_decode_step(cfg: ModelConfig, params: Tree, storage: jax.Array,
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(cfg, params, h)
     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, storage, slot_layers
+
+
+def forward_decode_step(cfg: ModelConfig, params: Tree, storage: jax.Array,
+                        block_tables: jax.Array, tokens: jax.Array,
+                        pos: jax.Array, active: jax.Array,
+                        slot_layers: Tree, *, block_size: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array, Tree]:
+    """ONE fused decode iteration over a fixed slot set — the whole
+    per-token layer loop as a single device program (jitted by
+    ``decode_step_jit`` with the paged pool and slot buffers donated, so
+    XLA updates them in place instead of copying the pool once per
+    attention layer per token, which is what the eager loop pays).
+
+    storage:      (attn_layers|1, NB, BS, W) paged pool (K ++ V packed).
+    block_tables: (n_slots, T) int32, -1 padded; T is the engine's
+                  power-of-two table bucket (fixed shape between
+                  admissions -> no retrace in steady state).
+    tokens/pos:   (n_slots,) int32 — last emitted token / tokens so far.
+    active:       (n_slots,) bool slot mask. Inactive slots compute
+                  garbage rows (row-independent math everywhere,
+                  including per-row capacity MoE) and their pool writes
+                  are dropped via a -1 block id (scatter mode="drop").
+    slot_layers:  {"sub{i}": {...}} per-sublayer slot state stacked on a
+                  leading num_blocks axis (mamba conv/state tails,
+                  enc-dec cross KV), carried through the layer scan and
+                  updated in place at the block index.
+
+    Returns (next_token, new_tokens, new_pos, storage', slot_layers');
+    next_token is the on-device argmax — the caller's single host
+    transfer per step.
+    """
+    nxt, storage, slot_layers = _decode_step_core(
+        cfg, params, storage, block_tables, tokens, pos.astype(jnp.int32),
+        active, slot_layers, block_size=block_size)
     new_tokens = jnp.where(active, nxt, tokens)
-    new_pos = pos + active.astype(jnp.int32)
+    new_pos = pos.astype(jnp.int32) + active.astype(jnp.int32)
     return nxt, new_tokens, new_pos, storage, slot_layers
 
 
@@ -1295,6 +1319,139 @@ def decode_step_cache_size() -> int:
     """Live compilation-cache entries of the fused decode step (the
     retrace-count guard in tests asserts deltas on this)."""
     return decode_step_jit._cache_size()
+
+
+def forward_spec_decode_step(cfg: ModelConfig, dcfg: ModelConfig,
+                             params: Tree, d_params: Tree,
+                             storage: jax.Array, d_storage: jax.Array,
+                             block_tables: jax.Array, tokens: jax.Array,
+                             pos: jax.Array, active: jax.Array,
+                             caps: jax.Array, slot_layers: Tree,
+                             d_slot_layers: Tree, *, block_size: int,
+                             k: int
+                             ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                        jax.Array, jax.Array, Tree, Tree]:
+    """ONE fused speculative decode iteration: draft proposes ``k``
+    tokens, target verifies all ``k+1`` new positions, and each slot
+    commits its longest accepted prefix — draft AND target run inside
+    this single donated program, and the per-slot ACCEPTANCE COUNT IS
+    DATA (an int32 lane), never shape, so any mix of 1..k+1 tokens
+    retiring across slots reuses one compiled executable.
+
+    Layout mirrors the plain step; the extras are:
+
+    d_storage:      draft paged KV riding the TARGET's block tables
+                    (same NB/BS grid, draft width). Never rolled back —
+                    rows past a slot's committed length are masked by
+                    ``lens`` and rewritten before they are ever
+                    attended, exactly like this round's own stale rows.
+    caps:           (n_slots,) int32 owned capacity in tokens. Micro-
+                    step ``j`` runs at ``pos + j`` which may exceed the
+                    admitted block span; the cap guard drops those pool
+                    writes (see ``_decode_step_core``) and the emission
+                    clamp below keeps every committed token inside it.
+    d_slot_layers:  the draft's recurrent/cross slot state, carried in
+                    the same donated carry as the target's.
+
+    Both models scan k+1 micro-steps over the consumed-token sequence
+    ``C = [cur, d_1 .. d_k]`` (micro-step j consumes C[j] at pos+j),
+    stacking each micro-step's post-state; per-slot acceptance then
+    SELECTS the state at depth ``n_emit-1`` (`take_along_axis` over the
+    stack axis) — rollback is a gather, not a replay. Target KV rows
+    the slot did NOT commit are restored from a pre-verify gather, so
+    the paged pool stays bit-identical to plain greedy decode.
+
+    Returns ``(out, new_tokens, new_pos, storage', d_storage',
+    slot_layers', d_slot_layers')`` where ``out`` is one packed
+    (n_slots, k+2) int32 matrix — columns 0..k are the target's greedy
+    tokens G, column k+1 is the emission count ``n_emit`` — the
+    caller's single host transfer retires ``out[s, :out[s, k+1]]``.
+    """
+    bs = block_size
+    ms = tokens.shape[0]
+    nb = storage.shape[1]
+    pos = pos.astype(jnp.int32)
+    caps = caps.astype(jnp.int32)
+    has_attn = any(kd == ATTN for kd in cfg.layer_kinds())
+
+    # -- draft: propose k tokens; C[j] is the token micro-step j consumes
+    def d_body(carry, j):
+        tok, dst, dlay = carry
+        nxt, dst, dlay = _decode_step_core(
+            dcfg, d_params, dst, block_tables, tok, pos + j, active, dlay,
+            block_size=bs, caps=caps)
+        return (nxt, dst, dlay), (tok, dlay)
+
+    (_, d_storage, _), (c_toks, d_stack) = lax.scan(
+        d_body, (tokens, d_storage, d_slot_layers), jnp.arange(k + 1))
+
+    # -- pre-verify gather of the k+1 candidate pool rows per slot, so
+    #    uncommitted writes can be restored bit-exactly afterwards
+    offs = pos[:, None] + jnp.arange(k + 1)[None, :]          # (ms, k+1)
+    qblk = jnp.take_along_axis(block_tables, offs // bs, axis=1,
+                               mode="clip")                   # (ms, k+1)
+    off = offs % bs
+    if has_attn:
+        old = storage[:, jnp.clip(qblk, 0, nb - 1), off]      # (L,ms,k+1,W)
+
+    # -- target: teacher-force the same k+1 positions; G[j] is the
+    #    target's greedy token after consuming C[0..j]
+    def t_body(carry, xs):
+        tok, j = xs
+        st, lay = carry
+        nxt, st, lay = _decode_step_core(
+            cfg, params, st, block_tables, tok, pos + j, active, lay,
+            block_size=bs, caps=caps)
+        return (st, lay), (nxt, lay)
+
+    (storage, _), (g_toks, t_stack) = lax.scan(
+        t_body, (storage, slot_layers), (c_toks, jnp.arange(k + 1)))
+
+    # -- acceptance: longest prefix of draft tokens matching the
+    #    target's own greedy stream; the +1 is the correction token on
+    #    a rejection / the free bonus token when all k are accepted.
+    #    All of this is element-wise int math — acceptance is DATA.
+    match = (c_toks[1:] == g_toks[:-1]).astype(jnp.int32)     # (k, ms)
+    a = jnp.cumprod(match, axis=0).sum(axis=0)                # (ms,)
+    n_emit = jnp.clip(jnp.minimum(a + 1, caps - pos), 1, k + 1)
+
+    # -- restore target pool rows past each slot's commit point (only
+    #    rows the verify sweep actually wrote: cap/active/pad guarded)
+    if has_attn:
+        keep = jnp.arange(k + 1)[None, :] < n_emit[:, None]   # (ms, k+1)
+        wrote = active[:, None] & (qblk >= 0) & (offs < caps[:, None])
+        restore_blk = jnp.where(wrote & ~keep, qblk, nb)
+        storage = storage.at[:, restore_blk, off].set(old, mode="drop")
+
+    # -- per-slot state rollback = gather at depth n_emit-1
+    sel = (n_emit - 1).astype(jnp.int32)
+    slot_layers = select_slot_state(t_stack, sel)
+    d_slot_layers = select_slot_state(d_stack, sel)
+
+    last = jnp.take_along_axis(g_toks, sel[None, :], axis=0)[0]
+    new_tokens = jnp.where(active, last, tokens)
+    emitted = jnp.where(active, n_emit, 0).astype(jnp.int32)
+    new_pos = pos + emitted
+    out = jnp.concatenate([g_toks.T, emitted[:, None]],
+                          axis=1).astype(jnp.int32)           # (ms, k+2)
+    return (out, new_tokens, new_pos, storage, d_storage, slot_layers,
+            d_slot_layers)
+
+
+# Speculative twin of decode_step_jit: BOTH pools and BOTH slot-state
+# carries are donated. Acceptance counts are data lanes, so retraces
+# happen only on a new (cfg, dcfg, k, slot count, table bucket, pool
+# shape) combination — never on how many tokens a step retires.
+spec_decode_step_jit = partial(
+    jax.jit, static_argnames=("cfg", "dcfg", "block_size", "k"),
+    donate_argnames=("storage", "d_storage", "slot_layers",
+                     "d_slot_layers"))(forward_spec_decode_step)
+
+
+def spec_decode_step_cache_size() -> int:
+    """Live compilation-cache entries of the fused speculative step
+    (retrace-guard tests assert deltas on this)."""
+    return spec_decode_step_jit._cache_size()
 
 
 def forward_decode(cfg: ModelConfig, params: Tree, cache: Tree,

@@ -74,8 +74,8 @@ class PrefillNode:
         self.prefix_cache = bool(prefix_cache) \
             and self.engine.supports_prefix_reuse
         # snapshot emission/restore rides the reuse path: when reuse is
-        # off (disabled, or gated off by REPRO_PREFILL=exact — see
-        # PrefillEngine.supports_prefix_reuse) cold runs skip it
+        # off (disabled, or gated off on a bucket_prefill=False engine —
+        # see PrefillEngine.supports_prefix_reuse) cold runs skip it
         self.needs_state = self.prefix_cache \
             and self.engine.requires_state_restore
         self.prefix_align = self.engine.prefix_align
@@ -220,12 +220,14 @@ class PrefillNode:
 class DecodeNode:
     def __init__(self, iid: str, cfg: ModelConfig, params, *,
                  num_blocks: int = 256, block_size: int = 16,
-                 max_slots: int = 8, fused: Optional[bool] = None):
+                 max_slots: int = 8, fused: Optional[bool] = None,
+                 spec=None):
         self.iid = iid
         self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
                                 block_size=block_size)
         self.engine = DecodeEngine(cfg, params, self.pool,
-                                   max_slots=max_slots, fused=fused)
+                                   max_slots=max_slots, fused=fused,
+                                   spec=spec)
         self.requests: Dict[int, ServeRequest] = {}
         self.draining = False        # pending role flip: no new traffic
         self.busy_until = 0.0        # virtual time the node frees up
@@ -264,22 +266,33 @@ class DecodeNode:
 
     def finish_admit(self, req: ServeRequest, out: PrefillOutput):
         """Attach an already-transferred request (KV in self.pool, mamba
-        state / cross KV rides on ``out``) to a decode slot."""
-        self.engine.admit(req.rid, out, self.pool.owned(req.rid))
+        state / cross KV rides on ``out``) to a decode slot. In spec
+        mode the engine additionally needs the prompt tokens: the draft
+        model's prefill runs at THIS node (only the target's KV crossed
+        the wire)."""
+        prompt = list(req.tokens) if self.engine.spec is not None else None
+        self.engine.admit(req.rid, out, self.pool.owned(req.rid),
+                          prompt=prompt)
         self.requests[req.rid] = req
 
     def step(self) -> List[ServeRequest]:
         """One continuous-batching iteration. Returns the requests that
         finished during it (so the event core can stamp finish times and
-        fire freed-capacity events)."""
+        fire freed-capacity events). A step retires ONE token per slot
+        on the plain path and 1..k+1 on the speculative path; bursts
+        are truncated at the request's token budget (greedy speculation
+        is lossless, so a truncated burst is exactly the greedy
+        stream's prefix)."""
         res = self.engine.step()
         finished: List[ServeRequest] = []
-        for slot, tok in res.items():
+        for slot, toks in res.items():
             rid = self.engine.rid[slot]
             req = self.requests[rid]
-            req.generated.append(tok)
-            if req.on_token:
-                req.on_token(tok)
+            budget = req.max_new_tokens + 1 - len(req.generated)
+            for tok in ([toks] if isinstance(toks, int) else toks)[:budget]:
+                req.generated.append(tok)
+                if req.on_token:
+                    req.on_token(tok)
             if len(req.generated) >= req.max_new_tokens + 1:
                 req.done = True
                 self.engine.evict(slot)

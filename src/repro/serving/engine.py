@@ -17,8 +17,10 @@ engines run as fast as the hardware allows):
     capacity — see models.modeling.forward_seq); suffix-only
     (prefix-reuse) prefills additionally bucket the PREFIX KV length,
     so warm admissions share one program per (prefix bucket, suffix
-    bucket) pair. ``REPRO_PREFILL=exact`` (one-release escape hatch)
-    restores exact-length grouping;
+    bucket) pair. (The ``REPRO_PREFILL=exact`` env hatch was retired
+    after the bucketed default survived three releases;
+    ``bucket_prefill=False`` remains a constructor arg for
+    measurement);
   * the decode iteration is ONE jitted, buffer-donated device program
     (``models.modeling.decode_step_jit``) over fixed-shape slot state —
     padded (max_slots,) token/position/mask arrays, a power-of-two
@@ -47,9 +49,10 @@ from repro.models.config import ATTN, ModelConfig
 from repro.models.modeling import (
     _attn_proj_qkv, _ffn_sublayer, _merge_heads, _split_heads,
     decode_step_jit, forward_prefill, lm_logits, mamba_sublayer_step,
-    rmsnorm, rope)
+    rmsnorm, rope, spec_decode_step_jit)
 from repro.models.params import block_period, num_blocks
 from repro.serving.kvcache import PagedKVPool
+from repro.serving.speculative import SpecConfig
 
 Tree = dict
 
@@ -140,11 +143,10 @@ class PrefillEngine:
         self._layer_fractions: Tuple[float, ...] = tuple(
             (bk * period + sb + 1) / total for bk, sb in self._attn_order)
         if bucket_prefill is None:
-            # one-release escape hatch (legacy REPRO_PREFILL_BUCKET=0
-            # still honored)
-            bucket_prefill = (
-                os.environ.get("REPRO_PREFILL", "bucket") != "exact"
-                and os.environ.get("REPRO_PREFILL_BUCKET", "1") != "0")
+            # bucketed is THE path (the REPRO_PREFILL=exact env hatch
+            # was retired after the bucketed default survived three
+            # releases); the constructor arg remains for measurement
+            bucket_prefill = True
         if jit_prefill is None:
             jit_prefill = os.environ.get("REPRO_PREFILL_JIT", "1") != "0"
         # bucketing serves EVERY family: the forward is pad-invariant by
@@ -209,7 +211,7 @@ class PrefillEngine:
         fuses/vectorizes differently and wobbles the SSD state by ulps,
         and padding it is not an option for hybrids because the warm
         attention must occupy exactly the cold run's padded key
-        geometry. Under ``REPRO_PREFILL=exact`` these families simply
+        geometry. Under ``bucket_prefill=False`` these families simply
         serve cold, as they did before snapshots existed."""
         if self._mamba_order and not self.bucket_prefill:
             return False
@@ -265,7 +267,8 @@ class PrefillEngine:
         model's pad-invariance contract — causal attention masks padded
         queries, the SSD recurrence skips zero-dt pad tokens bit-exactly,
         and window-local capacity MoE routes pads to a null slot.
-        ``REPRO_PREFILL=exact`` falls back to equal-length sub-batches.
+        (``bucket_prefill=False`` falls back to equal-length
+        sub-batches for measurement.)
 
         ``on_layer`` enables the layer-streaming mode: each request's
         per-layer (k, v) is yielded in network order (see OnLayer) for
@@ -554,15 +557,43 @@ class DecodeEngine:
     ``fused=False`` keeps the eager per-layer loop: one dispatch per
     sublayer, a whole-pool copy per attention layer, a host sync per
     step — the measured baseline in benchmarks/bench_decode.py.
+
+    ``spec=`` (a ``SpecConfig``) switches the fused step to the
+    speculative propose/verify program
+    (``models.modeling.spec_decode_step_jit``): draft and target run in
+    ONE donated program and each slot retires 1..k+1 tokens per step
+    (``step()`` then maps slots to token LISTS). The draft's paged KV
+    rides the target's block tables in an engine-owned storage array,
+    its recurrent/cross state in a second donated slot-state carry, and
+    its prompt is prefilled at admission by an engine-owned draft
+    PrefillEngine — the decode node never sees two models. Greedy
+    speculation is lossless, so the emitted stream (and the paged pool,
+    bit-for-bit) matches plain fused greedy decode.
     """
 
     def __init__(self, cfg: ModelConfig, params: Tree, pool: PagedKVPool,
-                 *, max_slots: int = 8, fused: Optional[bool] = None):
+                 *, max_slots: int = 8, fused: Optional[bool] = None,
+                 spec: Optional[SpecConfig] = None):
         self.cfg = cfg
         self.params = params
         self.pool = pool
         self.max_slots = max_slots
         self.fused = True if fused is None else bool(fused)
+        self.spec = spec
+        if spec is not None:
+            assert self.fused, "speculative decode requires the fused step"
+            assert not cfg.is_encoder_decoder, \
+                "speculative decode does not cover enc-dec families yet"
+            d_attn = len(_attn_layer_order(spec.draft_cfg))
+            self._d_storage = jnp.zeros(
+                (max(d_attn, 1), pool.num_blocks, pool.block_size,
+                 2 * spec.draft_cfg.kv_dim), pool.dtype)
+            self._d_slot_layers = decode_slot_state(spec.draft_cfg,
+                                                    max_slots)
+            # cold draft prompt prefill at admission (the draft has no
+            # prefix store; its whole cache is rebuilt per admission)
+            self._d_prefill = PrefillEngine(spec.draft_cfg,
+                                            spec.draft_params)
         self._attn_order = _attn_layer_order(cfg)
         self._mamba_order = _mamba_layer_order(cfg)
         # slot state: host mirrors (admission bookkeeping) ...
@@ -577,9 +608,12 @@ class DecodeEngine:
         self._table_w = 1                             # pow2 table bucket
         self._table = jnp.full((max_slots, 1), -1, jnp.int32)
         self._caps = np.zeros(max_slots, np.int64)    # tokens allocatable
+        self._caps_dev = jnp.zeros((max_slots,), jnp.int32)
         self._dirty = True        # host mirrors ahead of device arrays
         self.fused_steps = 0
         self.eager_steps = 0
+        self.spec_steps = 0       # fused speculative iterations
+        self.spec_emitted = 0     # tokens retired by those iterations
 
     # ------------------------------------------------------------- slots
     def free_slots(self) -> List[int]:
@@ -589,11 +623,18 @@ class DecodeEngine:
         return [i for i, r in enumerate(self.rid) if r is not None]
 
     def admit(self, rid: int, out: PrefillOutput, blocks: Sequence[int],
-              slot: Optional[int] = None) -> int:
+              slot: Optional[int] = None,
+              prompt: Optional[Sequence[int]] = None) -> int:
         """Attach a transferred request to a free slot. The KV for its
         prompt must already be in `self.pool` under `blocks`, and the
         request's FULL block allocation (prompt + generation room) must
-        be in place — the fused step snapshots the block table here."""
+        be in place — the fused step snapshots the block table here.
+
+        In ``spec=`` mode the caller must also pass the request's
+        ``prompt`` tokens: the draft model sees no transferred KV (only
+        the target's prefill crossed the wire), so the engine prefills
+        the draft here and seeds its KV/recurrent slot state alongside
+        the target's."""
         if slot is None:
             free = self.free_slots()
             if not free:
@@ -611,8 +652,35 @@ class DecodeEngine:
             buf = self._slot_layers[f"sub{sb}"]
             buf["xk"] = buf["xk"].at[bk, slot].set(xk.astype(buf["xk"].dtype))
             buf["xv"] = buf["xv"].at[bk, slot].set(xv.astype(buf["xv"].dtype))
+        if self.spec is not None:
+            if prompt is None:
+                raise ValueError(
+                    "spec-mode admission needs the prompt tokens (the "
+                    "draft model prefills here, at the decode node)")
+            self._admit_draft(slot, list(prompt), blocks)
         self._dirty = True
         return slot
+
+    def _admit_draft(self, slot: int, prompt: List[int],
+                     blocks: Sequence[int]):
+        """Cold draft prompt prefill + slot seeding: draft KV is written
+        into the engine-owned draft storage at the TARGET's blocks (the
+        draft rides the target's block tables), draft recurrent state
+        into the draft slot-state carry."""
+        d_out = self._d_prefill.run([prompt])[0]
+        if d_out.k is not None:
+            bs = self.pool.block_size
+            toks = np.arange(d_out.prompt_len)
+            blk = jnp.asarray(np.asarray(list(blocks))[toks // bs])
+            off = jnp.asarray(toks % bs)
+            kv = jnp.concatenate([d_out.k, d_out.v],
+                                 axis=-1).astype(self._d_storage.dtype)
+            self._d_storage = self._d_storage.at[:, blk, off].set(kv)
+        for (bk, sb), st in (d_out.mamba_state or {}).items():
+            buf = self._d_slot_layers[f"sub{sb}"]
+            for k2 in ("conv_x", "conv_b", "conv_c", "state"):
+                buf[k2] = buf[k2].at[bk, slot].set(
+                    st[k2].astype(buf[k2].dtype))
 
     def evict(self, slot: int):
         self.rid[slot] = None
@@ -623,7 +691,10 @@ class DecodeEngine:
     # -------------------------------------------------------------- step
     def step(self) -> Dict[int, int]:
         """One decode iteration over all active slots.
-        Returns {slot: next_token}."""
+        Returns {slot: next_token} — or, in ``spec=`` mode,
+        {slot: [token, ...]} with 1..k+1 tokens retiring per slot."""
+        if self.spec is not None:
+            return self._step_spec()
         if self.fused:
             return self._step_fused()
         return self._step_eager()
@@ -646,6 +717,7 @@ class DecodeEngine:
         self._caps = np.asarray(
             [len(self.pool.owned(r)) * bs if r is not None else 0
              for r in self.rid], np.int64)
+        self._caps_dev = jnp.asarray(self._caps.astype(np.int32))
         self._dirty = False
 
     def _step_fused(self) -> Dict[int, int]:
@@ -680,6 +752,49 @@ class DecodeEngine:
             self.pos[s_i] += 1
             self.last_tok[s_i] = out_np[s_i]
             out[s_i] = int(out_np[s_i])
+        return out
+
+    def _step_spec(self) -> Dict[int, List[int]]:
+        """One fused speculative iteration: {slot: emitted tokens},
+        1..k+1 per active slot. Mirrors ``_step_fused`` — same loud
+        overflow check, same donation adoption, still exactly ONE
+        device->host transfer (the packed (slots, k+2) out matrix)."""
+        act = self.active_slots()
+        if not act:
+            return {}
+        if self._dirty:
+            self._sync_device()
+        over = np.nonzero(self.pos >= self._caps)[0]
+        over = [s for s in over if self.rid[s] is not None]
+        if over:
+            s_i = over[0]
+            raise IndexError(
+                f"slot {s_i} (rid {self.rid[s_i]}): token position "
+                f"{int(self.pos[s_i])} outside its "
+                f"{int(self._caps[s_i])}-token block allocation")
+        k = self.spec.k
+        (packed, toks, pos, storage, d_storage, layers,
+         d_layers) = spec_decode_step_jit(
+            self.cfg, self.spec.draft_cfg, self.params,
+            self.spec.draft_params, self.pool.storage, self._d_storage,
+            self._table, self._tokens, self._pos, self._active,
+            self._caps_dev, self._slot_layers, self._d_slot_layers,
+            block_size=self.pool.block_size, k=k)
+        self.pool.set_storage(storage)       # donated: updated in place
+        self._d_storage = d_storage
+        self._slot_layers, self._d_slot_layers = layers, d_layers
+        self._tokens, self._pos = toks, pos
+        self.fused_steps += 1
+        self.spec_steps += 1
+        out_np = np.asarray(packed)          # the ONE host sync per step
+        out: Dict[int, List[int]] = {}
+        for s_i in act:
+            n = int(out_np[s_i, k + 1])
+            emit = [int(t) for t in out_np[s_i, :n]]
+            self.pos[s_i] += n
+            self.last_tok[s_i] = emit[-1]
+            self.spec_emitted += n
+            out[s_i] = emit
         return out
 
     def _step_eager(self) -> Dict[int, int]:

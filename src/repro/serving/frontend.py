@@ -115,7 +115,8 @@ class ServeGroup:
                  overlap_transfer: bool = True,
                  iid_prefix: Optional[str] = None,
                  prefill_kwargs: Optional[dict] = None,
-                 decode_kwargs: Optional[dict] = None):
+                 decode_kwargs: Optional[dict] = None,
+                 spec=None):
         self.gid = gid
         self.scenario = scenario
         self.cfg = cfg
@@ -136,6 +137,11 @@ class ServeGroup:
         self._blk_free_t = 0.0                     # blocking-mode link busy
         self.prefill_kwargs = dict(prefill_kwargs or {})
         self.decode_kwargs = dict(decode_kwargs or {})
+        # group-wide speculative draft binding: every decode node this
+        # group ever constructs (including P->D role flips) runs the
+        # same scenario-chosen draft
+        if spec is not None:
+            self.decode_kwargs.setdefault("spec", spec)
         self._prefix = f"{gid}/" if iid_prefix is None else iid_prefix
         self._n_p = itertools.count()
         self._n_d = itertools.count()
@@ -820,7 +826,8 @@ class ClusterFrontend:
                  prefix_cache: bool = True,
                  overlap_transfer: bool = True,
                  tickless: bool = True,
-                 adjust_period_s: float = 0.25):
+                 adjust_period_s: float = 0.25,
+                 spec=None):
         topology = topology or {"default": (1, 1)}
         prefill_kwargs = dict(prefill_kwargs or {})
         prefill_kwargs.setdefault("prefix_cache", prefix_cache)
@@ -844,7 +851,8 @@ class ClusterFrontend:
                 n_prefill=n_p, n_decode=n_d, transfer_mode=transfer_mode,
                 overlap_transfer=overlap_transfer,
                 iid_prefix="" if flat_iids else None,
-                prefill_kwargs=prefill_kwargs, decode_kwargs=decode_kwargs)
+                prefill_kwargs=prefill_kwargs, decode_kwargs=decode_kwargs,
+                spec=self._resolve_spec(spec, scenario, seed))
             g.on_capacity = self._note_capacity
             self.groups[scenario] = g
             if adjust_ratio:
@@ -861,6 +869,28 @@ class ClusterFrontend:
         self.adjust_period_s = float(adjust_period_s)
         self._next_adjust = self.adjust_period_s
         self._adjust_k = 0                  # synthetic adjust-step counter
+
+    def _resolve_spec(self, spec, scenario: str, seed: int):
+        """Scenario-aware draft binding for ``spec=``:
+
+        * ``None`` — plain greedy decode (default);
+        * a ``SpecConfig`` — one draft for every group;
+        * ``"auto"`` — per-scenario ``draft_for`` pick (a small family
+          drafting for the large one, speculation depth from the
+          scenario's output-length profile);
+        * a dict ``{scenario: SpecConfig | "auto" | None}`` — mixed
+          fleets (e.g. speculate only on the long-generation group).
+        """
+        if spec is None:
+            return None
+        if isinstance(spec, dict):
+            spec = spec.get(scenario)
+            if spec is None:
+                return None
+        if spec == "auto":
+            from repro.serving.speculative import draft_for
+            return draft_for(self.cfg, scenario, seed=seed)
+        return spec
 
     @property
     def rejections(self) -> int:

@@ -1,27 +1,43 @@
 """Disaggregated speculative decoding (paper §6.1, Discussion/Extension).
 
 A small draft model proposes K tokens autoregressively; the target model
-verifies them in ONE batched forward (scoring positions pos..pos+K), and
-the longest matching prefix is accepted (greedy speculative decoding is
-lossless: output is token-identical to target-only decoding).
+verifies them in ONE teacher-forced sweep over the k+1 new positions,
+and the longest matching prefix is accepted (greedy speculative decoding
+is lossless: output is token-identical to target-only decoding).
 
 Deployment follows the paper: the draft model is disaggregated WITH the
 large model — its prefill runs in the prefill instance, its decode state
 lives in the decode instance — so both models' caches ride the same
-block-free transfer. Here both sides run in-process with lockstep caches.
+block-free transfer. ``SpeculativeDecoder`` below is the b=1 REFERENCE
+ORACLE: lockstep caches, one sequence, every invariant explicit. The
+production path is the fused multi-slot program
+(``models.modeling.forward_spec_decode_step`` driven by
+``DecodeEngine(spec=...)``), which is parity-tested against both this
+oracle and the plain fused greedy step (tests/test_spec_fused.py).
+
+Both caches are incremental:
+
+  * the draft keeps a decode cache; each round snapshots it before
+    proposing, and afterwards rolls BACK to the snapshot and replays
+    only the accepted tokens through ``forward_decode`` (<= k+1 steps —
+    the recurrent-safe rollback; a KV truncation would lose SSM state);
+  * the target keeps a decode cache too: verification teacher-forces
+    exactly the k+1 new positions through it, and the per-position
+    caches captured during that sweep double as the rollback points.
+
+Per round that is O(k) model steps — the seed-era oracle instead
+re-prefilled the full prefix on both sides (O(n^2) over a generation).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.caches import zeros_cache
 from repro.models.config import ModelConfig
-from repro.models.modeling import (forward_decode, forward_prefill,
-                                   forward_seq, lm_logits)
+from repro.models.modeling import forward_decode, forward_prefill
 
 Tree = Dict[str, Any]
 
@@ -38,18 +54,67 @@ def _pad_cache(cache: Tree, new_s: int) -> Tree:
 
 
 @dataclass
+class SpecConfig:
+    """Draft-model binding for speculative decode: which small model
+    proposes, and how deep it speculates per target verification."""
+    draft_cfg: ModelConfig
+    draft_params: Tree
+    k: int = 4
+
+
+# Scenario tag -> speculation depth for the auto-picked draft: grouping
+# by scenario keeps output-length statistics similar inside a group
+# (§3.2), so the depth is a per-group constant — long-generation
+# scenarios amortize deeper speculation, short-answer ones do not.
+SCENARIO_SPEC_K = {"default": 4, "chat": 4, "qa": 3, "summarize": 2,
+                   "write": 6}
+
+
+def draft_for(cfg: ModelConfig, scenario: str = "default", *,
+              seed: int = 0, max_blocks: int = 2) -> SpecConfig:
+    """Scenario-aware draft choice (paper §6.1 co-located deployment):
+    a SMALL family drafting for a large one — same vocabulary (greedy
+    acceptance compares token ids), a fraction of the depth (whole
+    layer blocks, so hybrid periods stay intact), freshly initialized
+    params. Real deployments substitute a distilled checkpoint; the
+    serving mechanics (and the losslessness guarantee) are independent
+    of draft quality."""
+    from repro.models.params import block_period, init_params, num_blocks
+    per = block_period(cfg)
+    n_blk = max(1, min(max_blocks, num_blocks(cfg) // 4))
+    d_cfg = cfg.replace(num_layers=n_blk * per,
+                        name=f"{cfg.name}-draft{n_blk * per}")
+    d_params = init_params(d_cfg, jax.random.PRNGKey(seed))
+    return SpecConfig(d_cfg, d_params,
+                      k=SCENARIO_SPEC_K.get(scenario, SCENARIO_SPEC_K["default"]))
+
+
+@dataclass
 class SpecStats:
-    proposed: int = 0
-    accepted: int = 0
-    target_steps: int = 0
+    proposed: int = 0        # draft tokens proposed
+    accepted: int = 0        # draft tokens accepted by the target
+    emitted: int = 0         # tokens actually emitted (corrections and
+    #                          the all-accepted bonus token included)
+    target_steps: int = 0    # target verification sweeps (+ prefill)
+    draft_replay_tokens: int = 0  # rollback replays through the draft
 
     @property
     def acceptance(self) -> float:
         return self.accepted / self.proposed if self.proposed else 0.0
 
+    @property
+    def tokens_per_step(self) -> float:
+        """EXACT emitted tokens per target sweep — the speculation
+        speedup. Derived from ``emitted`` (not accepted+proposed): the
+        free bonus token of an all-accepted round and the correction
+        token of a rejection both count, truncation at max_new_tokens
+        is subtracted back out."""
+        return self.emitted / self.target_steps if self.target_steps \
+            else 0.0
+
 
 class SpeculativeDecoder:
-    """Greedy speculative decoding for one sequence (b=1)."""
+    """Greedy speculative decoding for one sequence (b=1 oracle)."""
 
     def __init__(self, target_cfg: ModelConfig, target_params: Tree,
                  draft_cfg: ModelConfig, draft_params: Tree, *, k: int = 4):
@@ -59,71 +124,73 @@ class SpeculativeDecoder:
         self.k = k
         self.stats = SpecStats()
 
-    # ----------------------------------------------------------- helpers
-    def _target_logits_at(self, tokens: List[int]) -> jax.Array:
-        """Target logits for every position of `tokens` (teacher-forced)."""
-        batch = {"tokens": jnp.asarray([tokens], jnp.int32)}
-        h, _, _ = forward_seq(self.tc, self.tp, batch, collect_cache=False,
-                              remat=False)
-        return lm_logits(self.tc, self.tp, h)[0]       # (len, vocab)
-
     # ------------------------------------------------------------ decode
     def generate(self, prompt: List[int], max_new_tokens: int) -> List[int]:
         """Returns generated tokens (token-identical to target greedy)."""
         out: List[int] = []
-        # draft keeps an incremental cache; the target re-verifies with a
-        # teacher-forced forward (prefill-style verification — in the
-        # disaggregated layout this runs on the prefill-side batch engine)
         horizon = len(prompt) + max_new_tokens + self.k + 2
-        d_first, d_cache = forward_prefill(
-            self.dc, self.dp, {"tokens": jnp.asarray([prompt], jnp.int32)})
+        batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+        t_first, t_cache = forward_prefill(self.tc, self.tp, batch)
+        t_cache = _pad_cache(t_cache, horizon)
+        _, d_cache = forward_prefill(self.dc, self.dp, batch)
         d_cache = _pad_cache(d_cache, horizon)
-        t_logits = self._target_logits_at(prompt)
-        cur = int(jnp.argmax(t_logits[-1]))            # first target token
+        cur = int(t_first[0])                          # first target token
         out.append(cur)
         self.stats.target_steps += 1
-        d_tok = jnp.asarray([int(d_first[0])], jnp.int32)
-
+        self.stats.emitted += 1
+        # loop invariant at the top of each round: both caches have
+        # consumed exactly prompt + out[:-1] (the last emitted token is
+        # in flight — the next round feeds it to both models first)
         while len(out) < max_new_tokens:
             # 1. draft proposes k tokens from the current context
             proposal: List[int] = []
             d_tok = jnp.asarray([cur], jnp.int32)
-            d_snapshot = d_cache
+            d_snapshot = d_cache                       # rollback point
             for _ in range(self.k):
                 d_tok, d_cache = forward_decode(self.dc, self.dp, d_cache,
                                                 d_tok)
                 proposal.append(int(d_tok[0]))
             self.stats.proposed += len(proposal)
-            # 2. target verifies all k in one teacher-forced pass
-            ctx = prompt + out + proposal
-            logits = self._target_logits_at(ctx)
+            # 2. target verifies incrementally: teacher-force ONLY the
+            #    k+1 new positions ([cur] + proposal) through its cache.
+            #    g[i] is the target's greedy token after consuming
+            #    position i; the caches captured along the sweep are the
+            #    per-position rollback points (no recompute).
+            g: List[int] = []
+            t_steps: List[Tree] = []
+            for tok in [cur] + proposal:
+                gt, t_cache = forward_decode(
+                    self.tc, self.tp, t_cache,
+                    jnp.asarray([tok], jnp.int32))
+                g.append(int(gt[0]))
+                t_steps.append(t_cache)
             self.stats.target_steps += 1
-            base = len(prompt) + len(out) - 1
             accepted = 0
-            nxt = None
-            for i, tok in enumerate(proposal):
-                want = int(jnp.argmax(logits[base + i]))
-                if want == tok:
-                    accepted += 1
-                else:
-                    nxt = want
-                    break
+            while accepted < self.k and proposal[accepted] == g[accepted]:
+                accepted += 1
             self.stats.accepted += accepted
-            out.extend(proposal[:accepted])
-            if len(out) >= max_new_tokens:
-                break
-            if nxt is None:
-                # all accepted: the target's own next token is free
-                nxt = int(jnp.argmax(logits[base + len(proposal)]))
-            out.append(nxt)
-            cur = nxt
-            # 3. roll the draft cache back to the accepted point and
-            #    replay the accepted suffix (keeps caches in lockstep)
-            d_cache = _pad_cache(
-                self._draft_cache_upto(prompt + out[:-1]), horizon)
+            # accepted proposals equal the target's own greedy tokens,
+            # so the emission is always g[:accepted+1] — the last entry
+            # is the correction on a rejection, the free bonus token
+            # when all k were accepted
+            emit = g[:accepted + 1]
+            out.extend(emit)
+            self.stats.emitted += len(emit)
+            prev, cur = cur, emit[-1]
+            # 3. restore the invariant. Target: the verify sweep already
+            #    produced the cache at every depth — pick the one that
+            #    consumed [cur] + proposal[:accepted]. Draft: roll back
+            #    to the snapshot and REPLAY only the accepted tokens
+            #    (recurrent-safe; an attention-only rollback could
+            #    truncate, an SSM draft cannot).
+            t_cache = t_steps[accepted]
+            d_cache = d_snapshot
+            replay = [prev] + proposal[:accepted]
+            for tok in replay:
+                _, d_cache = forward_decode(self.dc, self.dp, d_cache,
+                                            jnp.asarray([tok], jnp.int32))
+            self.stats.draft_replay_tokens += len(replay)
+        overshoot = len(out) - max_new_tokens
+        if overshoot > 0:
+            self.stats.emitted -= overshoot            # keep stats exact
         return out[:max_new_tokens]
-
-    def _draft_cache_upto(self, tokens: List[int]) -> Tree:
-        _, cache = forward_prefill(
-            self.dc, self.dp, {"tokens": jnp.asarray([tokens], jnp.int32)})
-        return cache

@@ -9,7 +9,6 @@ stated once — a suite that needs a stricter or looser comparison says
 so explicitly instead of forking a helper.
 """
 import dataclasses
-import os
 
 import numpy as np
 
@@ -21,15 +20,6 @@ from repro.serving.frontend import ClusterFrontend
 # multi-block prefixes (and COW tails) even at reduced prompt lengths
 POOL_KW = {"block_size": 4, "num_blocks": 96}
 BS = POOL_KW["block_size"]
-
-# mirrors PrefillEngine's escape-hatch parsing (pinned consistent by
-# test_state_snapshot_reuse.test_reuse_gate_follows_prefill_geometry):
-# under the exact-length hatch, SSM/hybrid state-snapshot reuse is
-# gated off (no geometry control => no bitwise state contract), so the
-# suites skip their warm-SSM legs and pin the cold degrade instead.
-EXACT_PREFILL = (os.environ.get("REPRO_PREFILL", "bucket") == "exact"
-                 or os.environ.get("REPRO_PREFILL_BUCKET", "1") == "0")
-
 
 def make_prompts(cfg, rng, lens):
     return [list(map(int, rng.integers(0, cfg.vocab_size, int(n))))

@@ -174,8 +174,8 @@ def test_capacity_moe_warm_prefix_matches_cold_serving():
     assert ts["prefill_compile_count"] >= 1.0
     assert 0.0 <= ts["prefill_bucket_hit_rate"] <= 1.0
     assert ts["prefill_batches"] == float(node.engine.prefill_batches)
-    # pad waste only exists on the bucketed default (the CI exact-parity
-    # job runs this suite with REPRO_PREFILL=exact: zero padding there)
+    # pad waste only exists on the bucketed default (an engine built
+    # with bucket_prefill=False pads nothing)
     assert 0.0 <= ts["prefill_pad_waste"] < 1.0
     if node.engine.bucket_prefill:
         assert ts["prefill_pad_waste"] > 0.0

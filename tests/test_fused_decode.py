@@ -211,18 +211,20 @@ def test_bucketed_prefill_is_exact():
     assert exact.padded_tokens < bucketed.padded_tokens
 
 
-def test_bucketing_universal_with_exact_escape_hatch(monkeypatch):
+def test_bucketing_universal_and_hatch_retired(monkeypatch):
     """Every family takes the bucketed path by default (the forward is
     pad-invariant by contract — there is no supports_bucketing gate
-    anymore); REPRO_PREFILL=exact is the one-release escape hatch back
-    to exact-length grouping."""
+    anymore). The one-release REPRO_PREFILL=exact env hatch is retired:
+    the environment is ignored and exact-length grouping is reachable
+    only through the explicit ``bucket_prefill=False`` constructor
+    arg."""
     for arch in ("mamba2-2.7b", "jamba-1.5-large-398b", "qwen2-moe-a2.7b",
                  "granite-3-8b"):
         cfg, params = reduced_params(arch)
         assert PrefillEngine(cfg, params).bucket_prefill, arch
         assert not hasattr(PrefillEngine(cfg, params), "supports_bucketing")
-    monkeypatch.setenv("REPRO_PREFILL", "exact")
     cfg, params = reduced_params("granite-3-8b")
-    assert not PrefillEngine(cfg, params).bucket_prefill
-    # explicit constructor choice still wins over the env
-    assert PrefillEngine(cfg, params, bucket_prefill=True).bucket_prefill
+    assert not PrefillEngine(cfg, params, bucket_prefill=False).bucket_prefill
+    # the retired env spelling is inert
+    monkeypatch.setenv("REPRO_PREFILL", "exact")
+    assert PrefillEngine(cfg, params).bucket_prefill

@@ -16,8 +16,8 @@ import numpy as np
 import pytest
 
 from conftest import reduced_params
-from parity_utils import EXACT_PREFILL, POOL_KW, family_setup, \
-    prefill_node, serve_sequential
+from parity_utils import POOL_KW, family_setup, prefill_node, \
+    serve_sequential
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill_pallas
 from repro.serving.kvcache import PagedKVPool, PoolExhausted
@@ -61,10 +61,6 @@ def test_warm_matches_cold_and_computes_suffix_only(arch):
 
 
 @pytest.mark.parametrize("arch", STATE_ARCHS)
-@pytest.mark.skipif(EXACT_PREFILL,
-                    reason="SSM snapshot reuse is gated off under "
-                    "REPRO_PREFILL=exact (serves cold; degrade "
-                    "pinned in test_state_snapshot_reuse)")
 def test_ssm_families_serve_warm_with_state_restore(arch):
     """SSM/hybrid stacks carry recurrent state a KV prefix alone cannot
     restore: the index stays ON and a snapshot restore rides each hit.
@@ -156,10 +152,6 @@ def test_cow_exhaustion_degrade_stays_aligned():
     assert pool.owned(3) == [] and pool.invariant_ok()
 
 
-@pytest.mark.skipif(EXACT_PREFILL,
-                    reason="SSM snapshot reuse is gated off under "
-                    "REPRO_PREFILL=exact (serves cold; degrade "
-                    "pinned in test_state_snapshot_reuse)")
 def test_attn_free_indexes_zero_width_blocks():
     """No attention layers -> blocks carry no KV payload, but the trie
     still indexes them as KEY HOLDERS so state snapshots have blocks to

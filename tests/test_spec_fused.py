@@ -1,0 +1,254 @@
+"""Fused speculative decode (the multi-token jitted step).
+
+Greedy speculation is LOSSLESS, so the fused propose/verify program
+must be token-identical to plain fused greedy decode for every family
+it is enabled on — through slot churn, warm prefix-reuse admissions,
+and per-slot acceptance counts that vary step to step — while keeping
+the paged pool BIT-identical to the plain path (rejected positions
+never land in pool storage) and never retracing on how many tokens a
+step happens to retire (acceptance is data, not shape).
+"""
+import gc
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from parity_utils import BS, decode_setup as _setup
+from repro.models.modeling import spec_decode_step_cache_size
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.speculative import (SpecConfig, SpeculativeDecoder,
+                                       draft_for)
+
+# every decoder-only family (enc-dec is gated out: the draft would need
+# its own encoder pass per admission — see the engine assert)
+FAMILIES = ["granite-3-8b", "qwen2-moe-a2.7b", "mamba2-2.7b",
+            "jamba-1.5-large-398b"]
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compiler_state():
+    """Same workaround as test_speculative: the b=1 oracle test below
+    compiles the big EAGER decode scan, and deep into a full-suite run
+    the XLA CPU compiler segfaults on it under the hundreds of live
+    executables the earlier suites accumulated — drop them first."""
+    jax.clear_caches()
+    gc.collect()
+    yield
+
+
+def _admit(pool, de, rid, out, prompt, room=12):
+    """Spec-mode twin of parity_utils.admit: spec admissions also carry
+    the prompt (the draft prefills at the decode node)."""
+    pool.alloc(rid, out.prompt_len + room)
+    if out.k is not None:
+        pool.write_prefill(
+            pool.owned(rid)[: (out.prompt_len + BS - 1) // BS],
+            out.k, out.v)
+    return de.admit(rid, out, pool.owned(rid),
+                    prompt=prompt if de.spec is not None else None)
+
+
+def _plain_streams(cfg, params, outs, prompts, *, steps, room=20):
+    """Reference: plain fused greedy stream per request."""
+    pool = PagedKVPool(cfg, num_blocks=64, block_size=BS)
+    de = DecodeEngine(cfg, params, pool, max_slots=len(outs))
+    gen = {}
+    for rid, out in enumerate(outs):
+        _admit(pool, de, rid, out, prompts[rid], room=room)
+        gen[rid] = [out.first_token]
+    for _ in range(steps):
+        for slot, tok in de.step().items():
+            gen[de.rid[slot]].append(tok)
+    return gen
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_spec_matches_plain_fused_with_slot_churn(arch):
+    """Fused-spec streams under admit/evict churn must be prefixes of
+    the plain fused greedy streams — with an IMPERFECT draft, so
+    acceptance genuinely varies (rounds emit 1..k+1 tokens)."""
+    cfg, params, prompts, _ = _setup(arch)
+    pe = PrefillEngine(cfg, params)
+    outs = pe.run(prompts)
+    spec = draft_for(cfg, seed=99)
+    spec = SpecConfig(spec.draft_cfg, spec.draft_params, k=3)
+
+    pool = PagedKVPool(cfg, num_blocks=48, block_size=BS)
+    de = DecodeEngine(cfg, params, pool, max_slots=3, spec=spec)
+    gen = {rid: [out.first_token] for rid, out in enumerate(outs)}
+
+    def steps(n):
+        for _ in range(n):
+            for slot, toks in de.step().items():
+                gen[de.rid[slot]].extend(toks)
+
+    # room covers the worst case of 4 steps x (k+1) accepted tokens
+    slot0 = _admit(pool, de, 0, outs[0], prompts[0], room=20)
+    _admit(pool, de, 1, outs[1], prompts[1], room=20)
+    steps(2)
+    _admit(pool, de, 2, outs[2], prompts[2], room=20)  # admitted mid-flight
+    steps(1)
+    de.evict(slot0)                              # rid 0 leaves mid-flight
+    pool.release(0)
+    steps(1)
+    assert de.spec_steps == 4
+    assert de.spec_emitted == sum(len(g) - 1 for g in gen.values())
+
+    plain = _plain_streams(cfg, params, outs, prompts, steps=16)
+    for rid, got in gen.items():
+        assert len(got) >= 3, (arch, rid)        # ≥1 token/slot/step
+        assert got == plain[rid][:len(got)], (arch, rid)
+
+
+def test_spec_matches_plain_on_warm_prefix_admission():
+    """A suffix-only (prefix-reuse) prefill feeds both paths the same
+    stitched KV; spec emission must still match plain greedy."""
+    import jax.numpy as jnp
+    cfg, params, _, _ = _setup("granite-3-8b")
+    rng = np.random.default_rng(11)
+    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    suffix = list(map(int, rng.integers(0, cfg.vocab_size, 5)))
+    pe = PrefillEngine(cfg, params)
+    cold, = pe.run([prefix + suffix])
+    prefix_kv = jnp.concatenate([cold.k[:, :8], cold.v[:, :8]], axis=-1)
+    warm = pe.run_suffix(suffix, prefix_kv)
+    assert warm.first_token == cold.first_token
+    spec = draft_for(cfg, seed=99)
+    gens = {}
+    for sp in (None, spec):
+        pool = PagedKVPool(cfg, num_blocks=48, block_size=BS)
+        de = DecodeEngine(cfg, params, pool, max_slots=2, spec=sp)
+        _admit(pool, de, 0, warm, prefix + suffix)
+        gen = [warm.first_token]
+        while len(gen) < 6:
+            got = de.step()[0]
+            gen.extend(got if isinstance(got, list) else [got])
+        gens[sp is None] = gen[:6]
+    assert gens[True] == gens[False]
+
+
+def test_spec_acceptance_variation_causes_zero_retraces():
+    """THE retrace guard: per-slot acceptance/emission counts are data
+    lanes, not shapes. One compiled program serves steps whose slots
+    retire different token counts (forced deterministically here via
+    per-slot headroom clamps on a perfect draft: slots capped at 2 and
+    4 tokens of room retire 2 and 4 tokens in the SAME step)."""
+    cfg, params, _, _ = _setup("granite-3-8b")
+    rng = np.random.default_rng(3)
+    # prompt lengths chosen so rid 0's block-rounded cap leaves EXACTLY
+    # 2 tokens of headroom (caps are BS multiples: 6 + 2 == 8 == 2*BS)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (6, 7)]
+    pe = PrefillEngine(cfg, params)
+    outs = pe.run(prompts)
+    spec = SpecConfig(cfg, params, k=3)          # perfect draft: a == k
+    pool = PagedKVPool(cfg, num_blocks=40, block_size=BS)
+    de = DecodeEngine(cfg, params, pool, max_slots=2, spec=spec)
+    # rid 0: room for exactly 2 more tokens (cap clamps emission to 2);
+    # rid 1: plenty of room (emission k+1 = 4)
+    slot0 = _admit(pool, de, 0, outs[0], prompts[0], room=2)
+    slot1 = _admit(pool, de, 1, outs[1], prompts[1], room=17)
+    base = spec_decode_step_cache_size()
+    first = de.step()                            # compiles the program
+    assert spec_decode_step_cache_size() - base == 1
+    assert len(first[slot0]) == 2 and len(first[slot1]) == 4
+    de.evict(slot0)                              # rid 0 is out of room
+    pool.release(0)
+    seen = {2, 4}
+    for _ in range(2):
+        for slot, toks in de.step().items():
+            seen.add(len(toks))
+    # varying emission counts, slot-set changes, zero recompiles
+    assert spec_decode_step_cache_size() - base == 1
+    assert len(seen) >= 2
+
+
+def test_spec_pool_stays_bit_identical_to_plain():
+    """Rejected positions never touch pool storage: the committed
+    region matches plain greedy decode bit-for-bit and everything past
+    it is still zero (the verify sweep's uncommitted writes were
+    restored) on a fresh zero-filled pool."""
+    cfg, params, prompts, _ = _setup("granite-3-8b")
+    pe = PrefillEngine(cfg, params)
+    out, = pe.run(prompts[:1])
+    pl = out.prompt_len
+    spec = draft_for(cfg, seed=99)               # imperfect: rejections
+    k = spec.k
+
+    pool_s = PagedKVPool(cfg, num_blocks=48, block_size=BS)
+    de_s = DecodeEngine(cfg, params, pool_s, max_slots=1, spec=spec)
+    _admit(pool_s, de_s, 0, out, prompts[0], room=12)
+    emitted = de_s.step()[0]
+    n = len(emitted)
+    assert n < k + 1, "seed gave a fully-accepting draft; pick another"
+
+    pool_p = PagedKVPool(cfg, num_blocks=48, block_size=BS)
+    de_p = DecodeEngine(cfg, params, pool_p, max_slots=1)
+    _admit(pool_p, de_p, 0, out, prompts[0], room=12)
+    for _ in range(n):
+        de_p.step()
+
+    # committed region: identical to plain, bit for bit. Both engines
+    # have written KV for positions [0, pl + n) (write-then-attend: the
+    # last emitted token's KV lands on the NEXT step).
+    a = np.asarray(pool_s.read_tokens(pool_s.owned(0), pl + n))
+    b = np.asarray(pool_p.read_tokens(pool_p.owned(0), pl + n))
+    assert np.array_equal(a, b)
+    # uncommitted region: the verify sweep wrote positions up to
+    # pl + k, but everything past the commit point was restored to the
+    # fresh pool's zeros
+    cap = len(pool_s.owned(0)) * BS
+    tail = np.asarray(pool_s.read_tokens(pool_s.owned(0), cap))[:, pl + n:]
+    assert not tail.any()
+
+
+def test_spec_engine_matches_b1_oracle():
+    """The fixed SpeculativeDecoder is the b=1 reference oracle: same
+    draft, same k — the fused engine must emit its exact stream."""
+    cfg, params = reduced_params("granite-3-8b")
+    rng = np.random.default_rng(21)
+    prompt = list(map(int, rng.integers(0, cfg.vocab_size, 9)))
+    spec = draft_for(cfg, seed=99)
+    n = 10
+    oracle = SpeculativeDecoder(cfg, params, spec.draft_cfg,
+                                spec.draft_params, k=spec.k)
+    want = oracle.generate(prompt, n)
+
+    pe = PrefillEngine(cfg, params)
+    out, = pe.run([prompt])
+    pool = PagedKVPool(cfg, num_blocks=48, block_size=BS)
+    de = DecodeEngine(cfg, params, pool, max_slots=1, spec=spec)
+    _admit(pool, de, 0, out, prompt, room=n + spec.k + 2)
+    got = [out.first_token]
+    while len(got) < n:
+        got.extend(de.step()[0])
+    assert got[:n] == want
+
+
+def test_spec_rejects_encoder_decoder():
+    cfg, params = reduced_params("whisper-base")
+    pool = PagedKVPool(cfg, num_blocks=16, block_size=BS)
+    with pytest.raises(AssertionError, match="enc-dec"):
+        DecodeEngine(cfg, params, pool, spec=SpecConfig(cfg, params))
+
+
+def test_draft_for_is_scenario_aware():
+    """Scenario-aware draft pairing: a small same-vocab config family
+    drafting for the large one, with speculation depth picked per
+    scenario group (output-length statistics are per-scenario, §3.2)."""
+    from repro.models.params import block_period
+    cfg, _ = reduced_params("granite-3-8b")
+    a = draft_for(cfg, "write")
+    b = draft_for(cfg, "summarize")
+    assert a.k > b.k                             # long-gen drafts deeper
+    assert a.draft_cfg.vocab_size == cfg.vocab_size
+    assert a.draft_cfg.num_layers < cfg.num_layers
+    # hybrid periods survive the depth cut (the reduced jamba is a
+    # single period deep, so its smallest valid draft keeps full depth)
+    hcfg, _ = reduced_params("jamba-1.5-large-398b")
+    h = draft_for(hcfg)
+    assert h.draft_cfg.num_layers % block_period(hcfg) == 0
+    assert h.draft_cfg.num_layers <= hcfg.num_layers

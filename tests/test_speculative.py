@@ -57,6 +57,9 @@ def test_speculative_is_lossless(draft_same):
         # a perfect draft should be accepted (near-)always
         assert spec.stats.acceptance > 0.9
     assert spec.stats.proposed > 0
+    # the emitted counter is exact even when the final round overshoots
+    # max_new_tokens (the truncated tail is subtracted back out)
+    assert spec.stats.emitted == n
 
 
 def test_speculative_saves_target_steps_with_good_draft():
@@ -68,3 +71,72 @@ def test_speculative_saves_target_steps_with_good_draft():
     spec.generate(prompt, n)
     # perfect draft: ~n/(k+1) verification passes instead of n steps
     assert spec.stats.target_steps <= n // 2 + 2
+
+
+def test_oracle_is_incremental_not_quadratic(monkeypatch):
+    """Bugfix regression: the seed-era oracle re-prefilled the FULL
+    prefix through both models every round — `_draft_cache_upto` on the
+    rollback path (instead of the captured-but-dead `d_snapshot`) and
+    `_target_logits_at` over prompt+out+proposal for verification,
+    O(n^2) model work over a generation. The fixed oracle prefills each
+    model exactly once, verifies teacher-forced through an incremental
+    target cache, and rolls the draft back to its snapshot, replaying
+    only the accepted suffix through forward_decode."""
+    import repro.serving.speculative as sp
+    cfg, params = reduced_params("granite-3-8b")
+    d_cfg = cfg.replace(num_layers=1, name="draft")
+    d_params = init_params(d_cfg, jax.random.PRNGKey(99))
+    calls = {"prefill": 0, "decode": 0}
+    real_p, real_d = sp.forward_prefill, sp.forward_decode
+
+    def count_p(*a, **kw):
+        calls["prefill"] += 1
+        return real_p(*a, **kw)
+
+    def count_d(*a, **kw):
+        calls["decode"] += 1
+        return real_d(*a, **kw)
+
+    monkeypatch.setattr(sp, "forward_prefill", count_p)
+    monkeypatch.setattr(sp, "forward_decode", count_d)
+    k, n = 3, 10
+    spec = SpeculativeDecoder(cfg, params, d_cfg, d_params, k=k)
+    rng = np.random.default_rng(4)
+    out = spec.generate(list(rng.integers(0, cfg.vocab_size, 9)), n)
+    assert len(out) == n
+    # one prefill per model, ever — not one per round
+    assert calls["prefill"] == 2
+    # per round: k draft proposals + k+1 verify positions + the
+    # accepted-suffix replay. EXACT accounting — any full-prefix rerun
+    # would blow this up.
+    rounds = spec.stats.target_steps - 1
+    assert calls["decode"] == \
+        rounds * (2 * k + 1) + spec.stats.draft_replay_tokens
+    assert spec.stats.draft_replay_tokens <= rounds * (k + 1)
+    # the quadratic seed-era helpers are gone for good
+    assert not hasattr(spec, "_target_logits_at")
+    assert not hasattr(spec, "_draft_cache_upto")
+
+
+def test_spec_stats_count_the_bonus_token_exactly():
+    """Bugfix regression: when all k proposals are accepted the target
+    emits a FREE bonus token; seed-era SpecStats only tracked
+    proposed/accepted, so any tokens-per-step estimate disagreed with
+    actual emission. `emitted` now counts every emitted token and
+    `tokens_per_step` is exact."""
+    cfg, params = reduced_params("granite-3-8b")
+    spec = SpeculativeDecoder(cfg, params, cfg, params, k=4)
+    rng = np.random.default_rng(5)
+    out = spec.generate(list(rng.integers(0, cfg.vocab_size, 8)), 12)
+    st = spec.stats
+    assert len(out) == 12
+    assert st.acceptance == 1.0          # perfect draft
+    # prefill emits 1, then 3 all-accepted rounds emit k+1 = 5 each
+    # (the 5th is the bonus token); the overshoot past max_new_tokens
+    # is subtracted, so emitted == 12 over 4 target passes exactly
+    assert st.target_steps == 4
+    assert st.emitted == 12
+    assert st.tokens_per_step == pytest.approx(12 / 4)
+    # accepted alone (12 here) undercounts emission per round — the
+    # bonus tokens are only visible through `emitted`
+    assert st.proposed == 12 and st.accepted == 12

@@ -23,8 +23,8 @@ import numpy as np
 import pytest
 
 from conftest import reduced_params
-from parity_utils import BS, EXACT_PREFILL, admit, assert_state_equal, \
-    prefill_node, serve_sequential
+from parity_utils import BS, admit, assert_state_equal, prefill_node, \
+    serve_sequential
 from repro.serving.engine import DecodeEngine, PrefillEngine, \
     prefill_compile_count
 from repro.serving.kvcache import PagedKVPool
@@ -37,16 +37,6 @@ VARIANTS = [
     ("jamba-1.5-large-398b", "sorted"),
 ]
 IDS = ["mamba2", "jamba-capacity", "jamba-sorted"]
-
-# the bitwise state contract is a property of the BUCKETED geometry
-# (see PrefillEngine.supports_prefix_reuse): under the exact-length
-# hatch SSM families serve cold, so the warm legs skip and
-# test_reuse_gate_follows_prefill_geometry / test_exact_mode_serves_
-# ssm_cold_without_snapshots pin the degrade instead
-needs_bucketed = pytest.mark.skipif(
-    EXACT_PREFILL, reason="state-snapshot reuse is gated off under "
-    "REPRO_PREFILL=exact (no bucketed geometry, no bitwise contract)")
-
 
 def _family(arch, dispatch):
     cfg, params = reduced_params(arch)
@@ -67,7 +57,6 @@ def _prompt(cfg, rng, n):
 
 
 @pytest.mark.parametrize("arch,dispatch", VARIANTS, ids=IDS)
-@needs_bucketed
 def test_warm_restore_is_bitwise_at_every_boundary(arch, dispatch):
     """Engine-level pin: restore from EACH emitted boundary; outputs
     token-identical, stitched KV + full recurrent state + re-emitted
@@ -107,7 +96,6 @@ def test_warm_restore_is_bitwise_at_every_boundary(arch, dispatch):
 
 
 @pytest.mark.parametrize("arch,dispatch", VARIANTS, ids=IDS)
-@needs_bucketed
 def test_decode_handoff_from_restored_state(arch, dispatch):
     """The restored-and-advanced warm state admits into decode (fused
     AND eager) producing the cold stream exactly."""
@@ -134,7 +122,6 @@ def test_decode_handoff_from_restored_state(arch, dispatch):
 
 
 @pytest.mark.parametrize("arch,dispatch", VARIANTS, ids=IDS)
-@needs_bucketed
 def test_warm_serving_matches_cold_through_frontend(arch, dispatch):
     """End to end through ClusterFrontend: SSM-family warm serving is
     token-identical to cold, the snapshot index records the hits, and
@@ -199,7 +186,6 @@ def test_non_boundary_cut_degrades_to_snapshot_boundary():
     assert pool.invariant_ok()
 
 
-@needs_bucketed
 def test_second_wave_reuses_compiled_suffix_program():
     """Zero-retrace guard: a second wave of warm restores with the same
     (prefix len, suffix bucket, stride) shapes — different tokens, a
@@ -226,7 +212,6 @@ def test_second_wave_reuses_compiled_suffix_program():
     assert_state_equal(cold2.mamba_state, warm2.mamba_state)
 
 
-@needs_bucketed
 def test_snapshot_stride_is_lcm_of_block_chunk_and_window():
     """The serving node's stride must divide evenly into pool blocks,
     SSD chunks, and (when present) capacity windows — the invariant
@@ -248,15 +233,15 @@ def test_snapshot_stride_is_lcm_of_block_chunk_and_window():
 
 def test_reuse_gate_follows_prefill_geometry():
     """The snapshot-reuse gate is a function of the prefill geometry:
-    bucketed => on (bitwise contract holds), exact-length => off (no
-    geometry control — a tiny suffix program wobbles the SSD state by
-    ulps, and hybrids cannot pad without breaking the attention key
-    geometry). Also pins parity_utils.EXACT_PREFILL to the engine's
-    own env parsing so the suites' skip logic cannot drift."""
+    bucketed (the default — the env hatch is retired) => on (bitwise
+    contract holds), exact-length via the ``bucket_prefill=False``
+    constructor arg => off (no geometry control — a tiny suffix program
+    wobbles the SSD state by ulps, and hybrids cannot pad without
+    breaking the attention key geometry)."""
     cfg, params = reduced_params("mamba2-2.7b")
     pe = PrefillEngine(cfg, params)
-    assert pe.bucket_prefill == (not EXACT_PREFILL)
-    assert pe.supports_prefix_reuse == (not EXACT_PREFILL)
+    assert pe.bucket_prefill
+    assert pe.supports_prefix_reuse
     assert pe.requires_state_restore
     for arch in ("mamba2-2.7b", "jamba-1.5-large-398b"):
         c, p = reduced_params(arch)
@@ -267,26 +252,3 @@ def test_reuse_gate_follows_prefill_geometry():
     # attention-only families reuse prefixes in EITHER geometry
     cg, pg = reduced_params("granite-3-8b")
     assert PrefillEngine(cg, pg, bucket_prefill=False).supports_prefix_reuse
-
-
-@pytest.mark.skipif(not EXACT_PREFILL,
-                    reason="pins the REPRO_PREFILL=exact degrade only")
-def test_exact_mode_serves_ssm_cold_without_snapshots():
-    """Under the exact-length hatch an SSM family with the prefix cache
-    REQUESTED must serve cold — same tokens as the cache-off run, no
-    snapshot traffic, no state restores — rather than crash or serve a
-    non-bitwise warm restore."""
-    cfg, params = _family("mamba2-2.7b", None)
-    rng = np.random.default_rng(41)
-    prefix = _prompt(cfg, rng, 35)
-    prompts = [prefix + _prompt(cfg, rng, 4) for _ in range(2)]
-    off, _ = serve_sequential(cfg, params, prompts, prefix_cache=False,
-                              max_new=2)
-    on, fe = serve_sequential(cfg, params, prompts, prefix_cache=True,
-                              max_new=2)
-    assert on == off
-    node = prefill_node(fe)
-    assert not node.prefix_cache and not node.needs_state
-    ps = fe.groups["default"].prefix_stats()
-    assert ps["snap_hits"] == ps["snap_stores"] == 0
-    assert ps["state_restores"] == 0 and ps["reused_tokens"] == 0
