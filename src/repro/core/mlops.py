@@ -15,13 +15,34 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.group import PDGroup, T_CONNECT, T_HEALTH, T_LOAD_SSD
+from repro.core.group import (PDGroup, T_CONNECT, T_HEALTH, T_LOAD_SFS,
+                              T_LOAD_SSD)
 from repro.core.perf_model import BottleneckMonitor, InstanceProfile, \
     optimal_ratio
 from repro.core.requests import tidal_rate
 from repro.core.zookeeper import MetaStore
 
 FAULT_LEVELS = ("recoverable", "device_reset", "node_replace")
+
+
+def substitute_ready_delay(level: str = "node_replace", *,
+                           storage: str = "ssd") -> float:
+    """Seconds from fault detection to a substitute taking traffic
+    (Fig. 13c/d closed form). The REAL serving path's fault controller
+    (serving/faults.py) charges this same timeline on its virtual clock,
+    so sim recovery walls and ServeGroup recovery walls are one model:
+
+      * recoverable   — restart in place, only the health check;
+      * device_reset  — dynamic RoCE reconstruction + health check;
+      * node_replace  — one stateless substitute container: connect +
+                        pre-compiled model load (SSD or SFS) + health.
+    """
+    t_load = T_LOAD_SSD if storage == "ssd" else T_LOAD_SFS
+    if level == "recoverable":
+        return T_HEALTH
+    if level == "device_reset":
+        return T_CONNECT + T_HEALTH
+    return T_CONNECT + t_load + T_HEALTH
 
 
 @dataclass

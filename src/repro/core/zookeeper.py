@@ -22,7 +22,13 @@ class InstanceMeta:
 
 
 class MetaStore:
-    def __init__(self):
+    def __init__(self, health_timeout_s: float = 60.0):
+        # per-store health timeout: a node silent for longer than this is
+        # reported unhealthy. The serving frontend threads its EVENT
+        # clock's timeout here (virtual seconds), so ejection math and
+        # heartbeats share one timescale — the old hard-coded wall-clock
+        # 60.0 was disconnected from the virtual timeline.
+        self.health_timeout_s = float(health_timeout_s)
         self.instances: Dict[str, InstanceMeta] = {}
         self.groups: Dict[str, Dict[str, List[str]]] = {}   # gid -> {"P": [...], "D": [...]}
         self.group_scenario: Dict[str, Optional[str]] = {}  # gid -> scenario
@@ -75,6 +81,18 @@ class MetaStore:
             m.healthy = healthy
             m.last_report = t
 
-    def unhealthy(self, t: float, timeout: float = 60.0) -> List[str]:
+    def unhealthy(self, t: float, timeout: Optional[float] = None
+                  ) -> List[str]:
+        """Instances flagged unhealthy or silent past the store's
+        timeout (override per call with ``timeout``)."""
+        if timeout is None:
+            timeout = self.health_timeout_s
         return [iid for iid, m in self.instances.items()
                 if not m.healthy or t - m.last_report > timeout]
+
+    def silent_since(self, iid: str) -> Optional[float]:
+        """Last report time for ``iid``, or None if unregistered — the
+        fault controller's input for exact-deadline ejection
+        (eject at last_report + health_timeout_s)."""
+        m = self.instances.get(iid)
+        return None if m is None else m.last_report

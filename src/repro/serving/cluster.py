@@ -54,6 +54,13 @@ class ServeRequest:
     submit_t: float = -1.0           # gateway arrival
     first_token_t: float = -1.0      # prefill batch completion (TTFT end)
     finish_t: float = -1.0           # last decode token (TPOT window end)
+    # fault tolerance (serving/faults.py): an SLO deadline in virtual
+    # seconds after submit (<0 == none); recovery sheds a request whose
+    # deadline already passed instead of re-admitting it, and counts
+    # every crash-driven re-prefill in ``readmits``
+    slo_deadline_s: float = -1.0
+    shed: bool = False
+    readmits: int = 0
 
 
 class PrefillNode:
@@ -91,6 +98,9 @@ class PrefillNode:
         self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
         self.sse_connections = 0
         self.draining = False        # pending role flip: no new traffic
+        self.crashed = False         # fault-injected: memory/work lost
+        self.ejected = False         # health-timeout removal (hang)
+        self.hung_until = 0.0        # straggling until this virtual time
         self.busy_until = 0.0        # virtual time the node frees up
         self._batch_evt = False      # a "batch" event is already queued
         self._evictions_seen = 0     # pool evictions already ledgered
@@ -104,7 +114,8 @@ class PrefillNode:
                 and len(self.waiting) < self.batch_size)
 
     def offer(self, req: ServeRequest) -> bool:
-        if self.draining or not self.idle():
+        if self.draining or self.crashed or self.ejected \
+                or not self.idle():
             return False
         self.forming.append(req)
         self.sse_connections += 1
@@ -230,11 +241,15 @@ class DecodeNode:
                                    spec=spec)
         self.requests: Dict[int, ServeRequest] = {}
         self.draining = False        # pending role flip: no new traffic
+        self.crashed = False         # fault-injected: memory/work lost
+        self.ejected = False         # health-timeout removal (hang)
+        self.hung_until = 0.0        # straggling until this virtual time
         self.busy_until = 0.0        # virtual time the node frees up
         self._step_evt = False       # a "step" event is already queued
 
     def can_admit(self) -> bool:
-        return not self.draining and bool(self.engine.free_slots())
+        return not (self.draining or self.crashed or self.ejected) \
+            and bool(self.engine.free_slots())
 
     def free_slot_count(self) -> int:
         return len(self.engine.free_slots())

@@ -688,6 +688,16 @@ class DecodeEngine:
         self.last_tok[slot] = 0
         self._dirty = True
 
+    def evict_all(self) -> List[int]:
+        """Clear every active slot in one sweep — the crash-recovery
+        wipe (serving/faults.py): a dead/ejected node's in-flight
+        requests are re-admitted elsewhere, so its slot state must not
+        survive into a rejoin."""
+        slots = self.active_slots()
+        for s in slots:
+            self.evict(s)
+        return slots
+
     # -------------------------------------------------------------- step
     def step(self) -> Dict[int, int]:
         """One decode iteration over all active slots.

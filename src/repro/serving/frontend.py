@@ -116,7 +116,9 @@ class ServeGroup:
                  iid_prefix: Optional[str] = None,
                  prefill_kwargs: Optional[dict] = None,
                  decode_kwargs: Optional[dict] = None,
-                 spec=None):
+                 spec=None, fault_plan=None,
+                 fault_kwargs: Optional[dict] = None,
+                 service_model=None):
         self.gid = gid
         self.scenario = scenario
         self.cfg = cfg
@@ -169,6 +171,16 @@ class ServeGroup:
         self.event_log: List[Tuple[float, str]] = []
         self._tickless = False         # True while ClusterFrontend.serve
         self.on_capacity = None        # gateway hook: capacity may have freed
+        # ------------------------------------------- fault tolerance
+        # deterministic virtual service-time model (faults.py): when
+        # set, batch/step events charge model costs instead of measured
+        # wall time, making the whole event log bit-reproducible
+        self.service_model = service_model
+        self.ft = None                 # FaultTolerance controller
+        if fault_plan is not None:
+            from repro.serving.faults import FaultTolerance
+            self.ft = FaultTolerance(self, fault_plan,
+                                     **(fault_kwargs or {}))
 
     # ------------------------------------------------- node construction
     def _new_prefill(self, t: float) -> PrefillNode:
@@ -212,7 +224,7 @@ class ServeGroup:
         for p in sorted(self.prefills,
                         key=lambda x: (-x.prefix_affinity(req),
                                        x.sse_connections)):
-            if p.draining:
+            if p.draining or p.crashed or p.ejected:
                 continue   # logical removal: not a rejection
             if p.offer(req):
                 self.accepted.append(req.rid)
@@ -328,6 +340,9 @@ class ServeGroup:
             self._ev_xfer(t, obj)
         elif kind == "step":
             self._ev_step(t, obj)
+        elif kind in ("fault", "hb", "eject", "requeue", "recover"):
+            if self.ft is not None:
+                self.ft.dispatch(kind, t, obj)
         # "pump": the pre-dispatch pump already retried waiting jobs;
         # "evict"/"segment" are ledger-only kinds
 
@@ -344,9 +359,14 @@ class ServeGroup:
             self._schedule_batch(p, p.busy_until)
             return
         batch_rids = [r.rid for r in p.forming]
+        batch_tokens = sum(len(r.tokens) for r in p.forming)
         t0 = time.perf_counter()
         ready = p.run_batch(collect_layers=self.overlap_transfer)
         w = time.perf_counter() - t0
+        if self.service_model is not None:
+            # deterministic chaos runs: charge the model's virtual cost,
+            # not the jittery measured wall time
+            w = self.service_model.prefill_batch_s(batch_tokens)
         self.prefill_batch_s.append(w)
         done = t + w
         p.busy_until = done
@@ -355,9 +375,12 @@ class ServeGroup:
             for rid in batch_rids:
                 p.batch_meta[rid] = (t, w)
         for req, _ in ready:
-            req.first_token_t = done
-            if req.submit_t >= 0.0:
-                self.ttft_s.append(max(0.0, done - req.submit_t))
+            # a crash-displaced re-admit keeps its ORIGINAL first-token
+            # stamp: TTFT ended when the first prefill streamed it
+            if req.first_token_t < 0.0:
+                req.first_token_t = done
+                if req.submit_t >= 0.0:
+                    self.ttft_s.append(max(0.0, done - req.submit_t))
         self._note_evictions(p, t)
         # overlapped: the engine streams layers DURING the compute
         # window, so the hand-off (scheduler begin) is stamped at batch
@@ -426,9 +449,12 @@ class ServeGroup:
         if d.busy_until > t + 1e-12:
             self._schedule_step(d, d.busy_until)
             return
+        n_slots = len(d.requests)
         t0 = time.perf_counter()
         finished = d.step()
         w = time.perf_counter() - t0
+        if self.service_model is not None:
+            w = self.service_model.decode_step_s(n_slots)
         self.decode_step_s.append(w)
         done = t + w
         d.busy_until = done
@@ -468,6 +494,14 @@ class ServeGroup:
         the scheduler pumped in lockstep), take ONE decode iteration per
         busy node, then — replacing the old spinning-ticks hack — jump
         the frontier to the next pending event if nothing advanced."""
+        if self.ft is not None:
+            # _drain_queued pops queued events regardless of time, so a
+            # future-dated fault/heartbeat would fire early and corrupt
+            # the deterministic chaos timeline
+            raise RuntimeError(
+                "fault injection requires the tickless event loop; the "
+                "staged tick() shim cannot honor future-dated fault "
+                "events")
         self._tickless = False
         vt0 = self.vclock
         for p in self.prefills:
@@ -504,13 +538,15 @@ class ServeGroup:
         done. Returns the draining iid, or None if the group cannot give
         up a node (min_each single-point-failure floor)."""
         if src_role == "P":
-            live = [p for p in self.prefills if not p.draining]
+            live = [p for p in self.prefills
+                    if not (p.draining or p.crashed or p.ejected)]
             if len(live) <= min_each:
                 return None
             node = min(live, key=lambda p: (len(p.forming) + len(p.waiting),
                                             p.iid))
         else:
-            live = [d for d in self.decodes if not d.draining]
+            live = [d for d in self.decodes
+                    if not (d.draining or d.crashed or d.ejected)]
             if len(live) <= min_each:
                 return None
             node = min(live, key=lambda d: (len(d.requests), d.iid))
@@ -639,6 +675,8 @@ class ServeGroup:
         out["prefill_bucket_hit_rate"] = hits / batches if batches else 0.0
         out["prefill_pad_waste"] = padt / (comp + padt) \
             if comp + padt else 0.0
+        if self.ft is not None:    # recovery ledger (serving/faults.py)
+            out.update(self.ft.ledger())
         return out
 
     def stats(self) -> Dict[str, float]:
@@ -827,8 +865,15 @@ class ClusterFrontend:
                  overlap_transfer: bool = True,
                  tickless: bool = True,
                  adjust_period_s: float = 0.25,
-                 spec=None):
+                 spec=None, faults=None,
+                 fault_kwargs: Optional[dict] = None,
+                 service_model=None,
+                 health_timeout_s: Optional[float] = None):
         topology = topology or {"default": (1, 1)}
+        if faults is not None and not tickless:
+            raise ValueError("fault injection (faults=) requires "
+                             "tickless=True: the staged tick loop cannot "
+                             "honor future-dated fault events")
         prefill_kwargs = dict(prefill_kwargs or {})
         prefill_kwargs.setdefault("prefix_cache", prefix_cache)
         if flat_iids and len(topology) > 1:
@@ -838,7 +883,10 @@ class ClusterFrontend:
             params = init_params(cfg, jax.random.PRNGKey(seed))
         self.cfg = cfg
         self.params = params
-        self.meta = MetaStore()
+        # per-store health timeout in VIRTUAL seconds (chaos runs use
+        # sub-second timeouts; the 60 s default is wall-clock scale)
+        self.meta = MetaStore() if health_timeout_s is None \
+            else MetaStore(health_timeout_s=health_timeout_s)
         self.xfer = KVTransferEngine(link or LinkModel(), seed=seed)
         self.transfer_mode = transfer_mode
         self.tickless = bool(tickless)
@@ -852,7 +900,10 @@ class ClusterFrontend:
                 overlap_transfer=overlap_transfer,
                 iid_prefix="" if flat_iids else None,
                 prefill_kwargs=prefill_kwargs, decode_kwargs=decode_kwargs,
-                spec=self._resolve_spec(spec, scenario, seed))
+                spec=self._resolve_spec(spec, scenario, seed),
+                fault_plan=(faults.get(scenario)
+                            if isinstance(faults, dict) else faults),
+                fault_kwargs=fault_kwargs, service_model=service_model)
             g.on_capacity = self._note_capacity
             self.groups[scenario] = g
             if adjust_ratio:

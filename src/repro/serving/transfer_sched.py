@@ -156,6 +156,9 @@ class TransferScheduler:
         self.n_admitted = 0
         self.n_retries = 0
         self.n_requeues = 0
+        self.n_restores = 0               # failed nodes brought back
+        self.n_flaps = 0                  # link outage windows injected
+        self.n_src_failed = 0             # jobs killed by a src crash
         self.state_segments = 0           # trailing state payloads shipped
         self.state_bytes = 0              # ... and their wire bytes
         self.admission_waits: List[float] = []
@@ -240,6 +243,52 @@ class TransferScheduler:
         """Mark a decode node dead: every active job targeting it is
         requeued at the next pump."""
         self.failed_nodes.add(iid)
+
+    def restore_node(self, iid: str):
+        """Inverse of fail_node: a recovered (or substituted) node may
+        receive transfers again. Without this the failed set was
+        one-way — a node that rejoined the group could never be a
+        transfer target for the rest of the process lifetime."""
+        if iid in self.failed_nodes:
+            self.failed_nodes.discard(iid)
+            self.n_restores += 1
+
+    def fail_src(self, iid: str) -> List["TransferJob"]:
+        """A SOURCE (prefill) node crashed: every unadmitted job it was
+        feeding dies with it — unlike a dst failure there is nothing to
+        re-send from, the linearized buffer lived on the dead node.
+        Partially-written dst blocks are released; the caller re-admits
+        the affected requests through a healthy prefill (re-prefill of
+        prompt + tokens emitted so far)."""
+        doomed = [j for j in self.jobs if j.src_iid == iid]
+        for job in doomed:
+            self._link(job.src_iid, job.dst.iid).drop_job(job)
+            if job.state == "active":
+                job.dst.pool.release(job.rid)
+            job.dst_blocks = []
+            job.state = "failed_src"
+            job.buf = {}
+            self.jobs.remove(job)
+            if job in self.waiting:
+                self.waiting.remove(job)
+            self.n_src_failed += 1
+        return doomed
+
+    def flap_link(self, src: str, dst: str, t: float, duration: float):
+        """Link outage window [t, t+duration): the in-flight message (if
+        any) is lost and retransmitted once the link returns; queued
+        segments wait it out. Deterministic — no RNG involved."""
+        link = self._link(src, dst)
+        link.free_t = max(link.free_t, t + duration)
+        if link.in_flight is not None:
+            _, seg = link.in_flight
+            if seg.done_t > t - 1e-12:       # mid-wire: full retransmit
+                seg.start_t = t + duration
+                seg.done_t = seg.start_t + self.link.time(seg.nbytes, 1)
+                if link.history:
+                    link.history[-1] = (seg.start_t, seg.done_t)
+                link.free_t = max(link.free_t, seg.done_t)
+        self.n_flaps += 1
 
     def _dst_gone(self, job: TransferJob) -> bool:
         return (job.dst.iid in self.failed_nodes
@@ -407,6 +456,9 @@ class TransferScheduler:
             "jobs_waiting_dst": float(len(self.waiting)),
             "retries": float(self.n_retries),
             "requeues": float(self.n_requeues),
+            "node_restores": float(self.n_restores),
+            "link_flaps": float(self.n_flaps),
+            "src_failed_jobs": float(self.n_src_failed),
             "admission_wait_mean_s": sum(waits) / n if n else 0.0,
             "link_busy_s": sum(l.busy_s for l in self.links.values()),
             "link_msgs": float(sum(l.n_msgs for l in self.links.values())),

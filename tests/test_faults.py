@@ -1,0 +1,307 @@
+"""Deterministic fault injection + token-exact crash recovery on the
+real event-driven data path (serving/faults.py).
+
+The contract under test: crash-killing any single prefill or decode
+node at an arbitrary FaultPlan time yields TOKEN-IDENTICAL output
+streams for every completed request vs the fault-free run (greedy
+decode; decode recovery re-prefills prompt + tokens emitted so far),
+leaks no pool blocks, and the same FaultPlan seed produces bit-identical
+event logs across runs. ``CHAOS_SEED`` (CI matrix) perturbs fault times
+without weakening any assertion.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.serving.cluster import ServeRequest
+from repro.serving.faults import (DeterministicService, FaultEvent,
+                                  FaultPlan)
+from repro.serving.frontend import ClusterFrontend
+
+# dense / MoE / attn-free SSM / hybrid — every KV-payload shape the
+# transfer+recovery path must survive
+CHAOS_FAMILIES = ["granite-3-8b", "qwen2-moe-a2.7b", "mamba2-2.7b",
+                  "jamba-1.5-large-398b"]
+SEED = int(os.environ.get("CHAOS_SEED", "0"))
+SVC = DeterministicService()
+
+
+def _cfg_params(arch):
+    cfg, params = reduced_params(arch)
+    if cfg.moe is not None:
+        # capacity dispatch drops tokens batch-dependently; parity tests
+        # pin the lossless sorted path (same idiom as the event-loop
+        # and transfer parity suites)
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  dispatch="sorted"))
+    return cfg, params
+
+
+def _requests(cfg, n, *, max_new=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        rid=i,
+        tokens=list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(5, 12))))),
+        max_new_tokens=max_new) for i in range(n)]
+
+
+def _frontend(cfg, params, plan=None, *, topo=(1, 2), recover_s=0.05,
+              heartbeat_s=0.02, timeout_s=0.05):
+    # batch_size=1: singleton prefill batches are trivially identical
+    # between the baseline and chaos runs (batch-composition invariance
+    # is pinned elsewhere; chaos parity must not depend on it)
+    return ClusterFrontend(
+        cfg, topology={"default": topo}, params=params,
+        prefill_kwargs={"batch_size": 1}, service_model=SVC,
+        faults=plan, health_timeout_s=timeout_s,
+        fault_kwargs={"heartbeat_s": heartbeat_s,
+                      "recover_delay_s": recover_s})
+
+
+def _run(cfg, params, reqs, plan=None, **kw):
+    fe = _frontend(cfg, params, plan, **kw)
+    for i, r in enumerate(reqs):
+        fe.submit(r, at=0.002 * i)
+    fe.serve(watch=reqs, max_events=200_000)
+    return fe
+
+
+def _assert_clean(group):
+    for node in group.prefills + group.decodes:
+        assert node.pool.invariant_ok(), node.iid
+
+
+# ------------------------------------------------- token identity matrix
+
+@pytest.mark.parametrize("arch", CHAOS_FAMILIES)
+def test_decode_crash_token_identity(arch):
+    """Crash-kill a decode node mid-stream: every in-flight request is
+    re-admitted elsewhere by re-prefilling prompt + emitted tokens, and
+    the final streams equal the fault-free run token for token."""
+    cfg, params = _cfg_params(arch)
+    base = _requests(cfg, 2)
+    _run(cfg, params, base)
+    assert all(r.done for r in base)
+
+    t_crash = 0.015 + SEED * 1e-4
+    plan = FaultPlan([FaultEvent(t_crash, "crash", "g0/D0", 0.05)])
+    chaos = _requests(cfg, 2)
+    fe = _run(cfg, params, chaos, plan)
+    g = fe.groups["default"]
+    assert g.ft.n_crashes == 1
+    for a, b in zip(base, chaos):
+        assert b.done and not b.shed
+        assert b.generated == a.generated
+    _assert_clean(g)
+
+
+@pytest.mark.parametrize("arch", CHAOS_FAMILIES)
+def test_prefill_crash_token_identity(arch):
+    """Crash-kill a prefill node: forming requests requeue to healthy
+    peers, in-flight transfers it sourced die (fail_src) and their
+    requests re-admit — token-identical to the fault-free run."""
+    cfg, params = _cfg_params(arch)
+    base = _requests(cfg, 3)
+    _run(cfg, params, base, topo=(2, 1))
+    assert all(r.done for r in base)
+
+    t_crash = 0.0045 + SEED * 1e-4
+    plan = FaultPlan([FaultEvent(t_crash, "crash", "g0/P0", 0.05)])
+    chaos = _requests(cfg, 3)
+    fe = _run(cfg, params, chaos, plan, topo=(2, 1))
+    g = fe.groups["default"]
+    assert g.ft.n_crashes == 1
+    for a, b in zip(base, chaos):
+        assert b.done and not b.shed
+        assert b.generated == a.generated
+    _assert_clean(g)
+
+
+def test_decode_crash_readmits_and_ledger():
+    """The granite decode-crash run actually exercises re-admission (not
+    a lucky quiet window), and the recovery ledger shows up in
+    transfer_stats()."""
+    cfg, params = _cfg_params("granite-3-8b")
+    plan = FaultPlan([FaultEvent(0.015, "crash", "g0/D0", 0.05)])
+    reqs = _requests(cfg, 3)
+    fe = _run(cfg, params, reqs, plan)
+    g = fe.groups["default"]
+    assert g.ft.n_readmitted >= 1
+    assert all(r.done for r in reqs)
+    assert any(r.readmits > 0 for r in reqs)
+    stats = fe.transfer_stats()["default"]
+    for key in ("ft_crashes", "ft_ejections", "ft_restores",
+                "ft_requests_requeued", "ft_requests_readmitted",
+                "ft_requests_shed", "ft_recovery_wall_median_s",
+                "ft_health_epoch_lag_median_s",
+                "ft_readmit_prefix_hit_rate"):
+        assert key in stats, key
+    assert stats["ft_crashes"] == 1.0
+    _assert_clean(g)
+
+
+def test_prefill_crash_kills_sourced_transfers():
+    """fail_src path: the dead prefill's in-flight transfer jobs are
+    dropped (their linearized buffers died with the node) and the
+    affected requests re-enter through a healthy peer."""
+    cfg, params = _cfg_params("granite-3-8b")
+    plan = FaultPlan([FaultEvent(0.0045, "crash", "g0/P0", 0.05)])
+    reqs = _requests(cfg, 4)
+    fe = _run(cfg, params, reqs, plan, topo=(2, 1))
+    g = fe.groups["default"]
+    assert g.sched.n_src_failed >= 1
+    assert g.ft.n_readmitted + g.ft.n_requeued >= 1
+    assert all(r.done for r in reqs)
+    _assert_clean(g)
+
+
+# ------------------------------------------------------- reproducibility
+
+def test_same_seed_bit_identical_event_log():
+    """Same FaultPlan seed => bit-identical group event log, chaos
+    action log, and token streams across runs (the DeterministicService
+    model replaces measured wall times on the virtual clock)."""
+    cfg, params = _cfg_params("granite-3-8b")
+
+    def chaos_run():
+        plan = FaultPlan.random(
+            7 + SEED, nodes=["g0/P0", "g0/D0", "g0/D1"],
+            t_lo=0.005, t_hi=0.05, n_events=3,
+            kinds=("crash", "hang"), hang_s=0.1, crash_recover_s=0.05)
+        reqs = _requests(cfg, 3)
+        fe = _frontend(cfg, params, plan)
+        for i, r in enumerate(reqs):
+            fe.submit(r, at=0.002 * i)
+        fe.serve(max_events=200_000)   # drain recovery events too
+        g = fe.groups["default"]
+        return list(g.event_log), list(g.ft.log), \
+            [list(r.generated) for r in reqs]
+
+    ev1, log1, toks1 = chaos_run()
+    ev2, log2, toks2 = chaos_run()
+    assert ev1 == ev2
+    assert log1 == log2
+    assert toks1 == toks2
+    assert any(kind in ("crash", "hang") for _, kind, _ in log1)
+
+
+def test_fault_plan_seeded_and_sorted():
+    p1 = FaultPlan.random(11, nodes=["a", "b"], links=[("a", "b")],
+                          t_lo=0.0, t_hi=1.0, n_events=5)
+    p2 = FaultPlan.random(11, nodes=["a", "b"], links=[("a", "b")],
+                          t_lo=0.0, t_hi=1.0, n_events=5)
+    assert p1.events == p2.events
+    assert list(p1) == sorted(p1, key=lambda e: (e.t, e.kind, e.target))
+    p3 = FaultPlan.random(12, nodes=["a", "b"], links=[("a", "b")],
+                          t_lo=0.0, t_hi=1.0, n_events=5)
+    assert p3.events != p1.events
+
+
+# --------------------------------------------- health epochs & ejection
+
+def test_silent_node_ejected_at_exact_deadline():
+    """Satellite: per-store health timeout on the virtual clock. A node
+    that hangs is ejected at EXACTLY last_report + health_timeout_s —
+    the controller schedules a precisely-timestamped eject event instead
+    of discovering the timeout at the next (laggy) epoch."""
+    cfg, params = _cfg_params("granite-3-8b")
+    hb, timeout = 0.02, 0.05
+    plan = FaultPlan([FaultEvent(0.03, "hang", "g0/D0", 0.2)])
+    fe = _frontend(cfg, params, plan, heartbeat_s=hb, timeout_s=timeout)
+    assert fe.meta.health_timeout_s == timeout
+    fe.serve(max_events=200_000)
+    ft = fe.groups["default"].ft
+    ejects = [e for e in ft.log if e[1] == "eject"]
+    assert len(ejects) == 1
+    # last heartbeat report before the hang lands at t=hb; the eject
+    # must fire at last_report + timeout, not at an epoch boundary
+    assert ejects[0][0] == pytest.approx(hb + timeout, abs=1e-9)
+    # the straggler resumes at 0.23 and rejoins with its memory intact
+    assert ft.n_restored == 1
+    assert ft.recovery_walls and ft.recovery_walls[0] == \
+        pytest.approx(0.23 - (hb + timeout), abs=1e-9)
+
+
+def test_short_hang_straggles_without_ejection():
+    """A hang shorter than the health timeout just delays the node
+    (busy_until rides the virtual clock); nothing is ejected and the
+    streams still complete identically."""
+    cfg, params = _cfg_params("granite-3-8b")
+    base = _requests(cfg, 2)
+    _run(cfg, params, base)
+    plan = FaultPlan([FaultEvent(0.01, "hang", "g0/D0", 0.03)])
+    chaos = _requests(cfg, 2)
+    fe = _run(cfg, params, chaos, plan, timeout_s=0.5)
+    ft = fe.groups["default"].ft
+    assert ft.n_hangs == 1 and ft.n_ejected == 0
+    for a, b in zip(base, chaos):
+        assert b.done and b.generated == a.generated
+
+
+# ------------------------------------------------ substitute integration
+
+def test_failed_node_restored_takes_transfers_again():
+    """Satellite regression: TransferScheduler.failed_nodes was a
+    one-way set. Crash the SOLE decode node before traffic arrives; the
+    rebooted substitute must be removed from failed_nodes
+    (restore_node) and land transfers, or the requests starve."""
+    cfg, params = _cfg_params("granite-3-8b")
+    plan = FaultPlan([FaultEvent(0.0005, "crash", "g0/D0", 0.01)])
+    reqs = _requests(cfg, 2)
+    fe = _frontend(cfg, params, plan, topo=(1, 1))
+    for i, r in enumerate(reqs):
+        fe.submit(r, at=0.02 + 0.002 * i)
+    fe.serve(watch=reqs, max_events=200_000)
+    g = fe.groups["default"]
+    assert all(r.done for r in reqs)
+    assert g.sched.n_restores == 1
+    assert not g.sched.failed_nodes
+    assert g.ft.n_restored == 1
+    assert g.ft.recovery_walls
+    # the substitute re-registered in the meta store
+    assert "g0/D0" in fe.meta.group_members("g0", "D")
+    _assert_clean(g)
+
+
+def test_slo_hopeless_request_is_shed():
+    """Recovery does not burn compute on a request whose SLO deadline
+    already passed: it is shed (done, flagged) and ledgered."""
+    cfg, params = _cfg_params("granite-3-8b")
+    plan = FaultPlan([FaultEvent(0.012, "crash", "g0/D0", 0.5)])
+    req = _requests(cfg, 1, max_new=8)[0]
+    req.slo_deadline_s = 0.008
+    fe = _run(cfg, params, [req], plan, topo=(1, 1), recover_s=0.5)
+    ft = fe.groups["default"].ft
+    assert req.shed and req.done
+    assert ft.n_shed == 1
+    assert fe.transfer_stats()["default"]["ft_requests_shed"] == 1.0
+
+
+# -------------------------------------------------------------- guards
+
+def test_faults_require_tickless():
+    """The staged tick() shim pops queued events regardless of time, so
+    future-dated fault events would fire early — rejected up front."""
+    cfg, params = _cfg_params("granite-3-8b")
+    plan = FaultPlan([FaultEvent(0.5, "crash", "g0/D0")])
+    with pytest.raises(ValueError, match="tickless"):
+        ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                        faults=plan, tickless=False)
+
+
+def test_metastore_timeout_threaded():
+    """Satellite: MetaStore.unhealthy's hard-coded 60 s timeout is now
+    per-store config; the per-call override still wins."""
+    from repro.core.zookeeper import MetaStore
+    ms = MetaStore(health_timeout_s=0.1)
+    ms.gather_instance(0.0, "n0", "P", "g0")
+    ms.health_report(0.0, "n0")
+    assert ms.unhealthy(0.05) == []
+    assert ms.unhealthy(0.2) == ["n0"]          # per-store default
+    assert ms.unhealthy(0.2, timeout=1.0) == []  # per-call override
+    assert ms.silent_since("n0") == 0.0
+    assert ms.silent_since("ghost") is None

@@ -224,3 +224,102 @@ def test_multihop_conflicts_retry_and_still_deliver():
         job.dst_blocks[:job.n_kv_blocks], 10))
     want = np.concatenate([np.asarray(k), np.asarray(v)], -1)
     np.testing.assert_array_equal(got, want)
+
+
+def test_restore_node_reopens_transfer_target():
+    """Regression: ``failed_nodes`` was a ONE-WAY set — a node that
+    recovered could never be a transfer target again for the rest of
+    the process lifetime. fail -> recover -> the transfer must land."""
+    cfg, _ = reduced_params("granite-3-8b")
+    rng = np.random.default_rng(6)
+    d0 = SimpleNamespace(iid="D0", pool=PagedKVPool(cfg, **POOL_KW),
+                         draining=False)
+    sched = TransferScheduler(
+        LinkModel(),
+        pick_dst=lambda job: None if "D0" in sched.failed_nodes else d0)
+    sched.fail_node("D0")
+    req, out, k, v = _fake_job_inputs(cfg, rng, tokens=9, rid=1)
+    job = sched.begin(req, out, src_iid="P0", dst=d0, compute_s=0.0)
+    # the dead target strands the job: requeued with nowhere to go
+    sched.pump(sched.now + 1.0)
+    assert job.state == "waiting_dst"
+    assert d0.pool.free_blocks == POOL_KW["num_blocks"]   # released
+    # recovery: the node may take transfers again
+    sched.restore_node("D0")
+    assert sched.n_restores == 1
+    sched.restore_node("D0")                    # idempotent
+    assert sched.n_restores == 1
+    for _ in range(10_000):
+        if sched.idle():
+            break
+        nxt = sched.next_event()
+        if nxt is None:
+            sched.pump(sched.now + 1.0)
+            continue
+        sched.pump(nxt)
+    assert job.state == "admitted" and job.dst is d0
+    got = np.asarray(d0.pool.read_tokens(job.dst_blocks[:job.n_kv_blocks],
+                                         9))
+    want = np.concatenate([np.asarray(k), np.asarray(v)], -1)
+    np.testing.assert_array_equal(got, want)
+    assert d0.pool.invariant_ok()
+
+
+def test_fail_src_drops_jobs_and_releases_dst_blocks():
+    """A SOURCE (prefill) crash dooms the jobs it was feeding — nothing
+    can re-send their buffers — but peers' jobs keep flowing and the
+    partially-written dst blocks are released exactly once."""
+    cfg, _ = reduced_params("granite-3-8b")
+    rng = np.random.default_rng(8)
+    d0 = SimpleNamespace(iid="D0", pool=PagedKVPool(cfg, **POOL_KW),
+                         draining=False)
+    sched = TransferScheduler(LinkModel(), pick_dst=lambda job: d0)
+    req0, out0, _, _ = _fake_job_inputs(cfg, rng, tokens=12, rid=0)
+    req1, out1, k1, v1 = _fake_job_inputs(cfg, rng, tokens=7, rid=1)
+    j0 = sched.begin(req0, out0, src_iid="P0", dst=d0, compute_s=0.0)
+    j1 = sched.begin(req1, out1, src_iid="P1", dst=d0, compute_s=0.0)
+    sched.pump(sched.link.time(j0.segments[0].nbytes, 1) * 1.5)
+    doomed = sched.fail_src("P0")
+    assert doomed == [j0] and j0.state == "failed_src"
+    assert not j0.dst_blocks and not j0.buf
+    assert sched.n_src_failed == 1
+    while not sched.idle():
+        nxt = sched.next_event()
+        assert nxt is not None, "scheduler stalled"
+        sched.pump(nxt)
+    assert j1.state == "admitted"
+    got = np.asarray(d0.pool.read_tokens(j1.dst_blocks[:j1.n_kv_blocks],
+                                         7))
+    want = np.concatenate([np.asarray(k1), np.asarray(v1)], -1)
+    np.testing.assert_array_equal(got, want)
+    d0.pool.release(1)
+    assert d0.pool.invariant_ok()
+    assert d0.pool.free_blocks == POOL_KW["num_blocks"]   # no leak
+
+
+def test_flap_link_retransmits_in_flight_segment():
+    """A link outage window loses the in-flight message; it retransmits
+    after the flap, delivery stays bit-exact and deterministic."""
+    cfg, _ = reduced_params("granite-3-8b")
+    rng = np.random.default_rng(12)
+    d0 = SimpleNamespace(iid="D0", pool=PagedKVPool(cfg, **POOL_KW),
+                         draining=False)
+    sched = TransferScheduler(LinkModel(), pick_dst=lambda job: d0)
+    req, out, k, v = _fake_job_inputs(cfg, rng, tokens=11, rid=2)
+    job = sched.begin(req, out, src_iid="P0", dst=d0, compute_s=0.0)
+    seg0 = sched.link.time(job.segments[0].nbytes, 1)
+    sched.pump(seg0 * 1.5)           # first segment landed, next in flight
+    t_flap, dur = sched.now, 0.05
+    sched.flap_link("P0", "D0", t_flap, dur)
+    assert sched.n_flaps == 1
+    while not sched.idle():
+        nxt = sched.next_event()
+        assert nxt is not None
+        sched.pump(nxt)
+    assert job.state == "admitted"
+    # the interrupted segment could only finish AFTER the outage window
+    assert job.admitted_t >= t_flap + dur
+    got = np.asarray(d0.pool.read_tokens(job.dst_blocks[:job.n_kv_blocks],
+                                         11))
+    want = np.concatenate([np.asarray(k), np.asarray(v)], -1)
+    np.testing.assert_array_equal(got, want)
