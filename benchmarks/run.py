@@ -6,9 +6,9 @@ import argparse
 import sys
 
 from benchmarks import (bench_decode, bench_e2e, bench_forwarding,
-                        bench_kernels, bench_open_loop, bench_pd_ratio,
-                        bench_prefill, bench_prefix_cache, bench_recovery,
-                        bench_spec, bench_transfer)
+                        bench_goodput, bench_kernels, bench_open_loop,
+                        bench_pd_ratio, bench_prefill, bench_prefix_cache,
+                        bench_recovery, bench_spec, bench_transfer)
 from benchmarks.common import emit
 
 ALL = {
@@ -23,6 +23,7 @@ ALL = {
     "recovery": bench_recovery,       # Fig 13b/c/d
     "kernels": bench_kernels,         # kernel microbench
     "open_loop": bench_open_loop,     # Poisson/tidal arrivals, TTFT/TPOT SLO
+    "goodput": bench_goodput,         # autoscaler vs static SLO-goodput
 }
 
 

@@ -37,6 +37,37 @@ class ServingProfile:
         return self.tpot_base + self.tpot_per_req * concurrent
 
 
+@dataclass(frozen=True)
+class NodeClass:
+    """One hardware class in the shared autoscaler node pool.
+
+    The real engines execute the same compute regardless of class (token
+    streams are class-invariant); a class only scales the VIRTUAL
+    service time its node charges the event clock — prefill-heavy nodes
+    run prefill batches faster and decode steps slower, decode-heavy
+    the inverse. ``role_bias`` steers the pool's lease choice: the
+    autoscaler prefers a prefill-heavy node when growing the P side of
+    a group, falling back to balanced then off-bias classes when the
+    preferred inventory is exhausted. ``provision_level`` picks the
+    ``core.mlops.substitute_ready_delay`` timeline a provisioning event
+    pays before the node takes traffic (one stateless container:
+    connect + model load + health)."""
+    name: str
+    role_bias: str = ""              # "P" | "D" | "" (no preference)
+    prefill_scale: float = 1.0       # service-time multiplier (<1 faster)
+    decode_scale: float = 1.0
+    provision_level: str = "node_replace"
+
+
+BALANCED = NodeClass("balanced")
+PREFILL_HEAVY = NodeClass("prefill-heavy", role_bias="P",
+                          prefill_scale=0.6, decode_scale=1.5)
+DECODE_HEAVY = NodeClass("decode-heavy", role_bias="D",
+                         prefill_scale=1.5, decode_scale=0.6)
+
+NODE_CLASSES = {c.name: c for c in (BALANCED, PREFILL_HEAVY, DECODE_HEAVY)}
+
+
 def profile_for(cfg: ModelConfig) -> ServingProfile:
     n_attn = sum(1 for k in cfg.layer_kinds() if k == ATTN)
     kv_bpt = 2 * cfg.kv_dim * n_attn * 2          # K+V, bf16

@@ -33,7 +33,14 @@ class MetaStore:
         self.groups: Dict[str, Dict[str, List[str]]] = {}   # gid -> {"P": [...], "D": [...]}
         self.group_scenario: Dict[str, Optional[str]] = {}  # gid -> scenario
         self._ip_counter = itertools.count()
-        self.events: List[Tuple[float, str]] = []           # audit log
+        self.events: List[Tuple[float, str]] = []   # audit log (windowed)
+        self.n_events = 0                           # monotonic count
+
+    def _audit(self, t: float, msg: str):
+        self.events.append((t, msg))
+        self.n_events += 1
+        if len(self.events) > 4096:                 # long-run retention
+            del self.events[:-2048]
 
     # ------------------------------------------------------------ RoCE
     def assign_ips(self, n_devices: int) -> Tuple[str, ...]:
@@ -55,7 +62,7 @@ class MetaStore:
         self.groups.setdefault(gid, {"P": [], "D": []})
         if role in ("P", "D"):
             self.groups[gid][role].append(iid)
-        self.events.append((t, f"gather {iid} role={role} group={gid}"))
+        self._audit(t, f"gather {iid} role={role} group={gid}")
         return meta
 
     def collection_complete(self, gid: str, expected: int) -> bool:
@@ -69,7 +76,7 @@ class MetaStore:
             lst = self.groups[meta.group][meta.role]
             if iid in lst:
                 lst.remove(iid)
-        self.events.append((t, f"remove {iid}"))
+        self._audit(t, f"remove {iid}")
 
     def group_members(self, gid: str, role: str) -> List[str]:
         return list(self.groups.get(gid, {}).get(role, []))

@@ -61,6 +61,10 @@ class ServeRequest:
     slo_deadline_s: float = -1.0
     shed: bool = False
     readmits: int = 0
+    # gateway overload control: placement attempts burned at the
+    # ClusterFrontend (capped, seeded backoff mirrors the fault
+    # controller's requeue policy)
+    gw_attempts: int = 0
 
 
 class PrefillNode:
@@ -98,10 +102,17 @@ class PrefillNode:
         self.waiting: List[Tuple[ServeRequest, PrefillOutput]] = []
         self.sse_connections = 0
         self.draining = False        # pending role flip: no new traffic
+        self.decommissioning = False # draining back into the node pool
         self.crashed = False         # fault-injected: memory/work lost
         self.ejected = False         # health-timeout removal (hang)
         self.hung_until = 0.0        # straggling until this virtual time
         self.busy_until = 0.0        # virtual time the node frees up
+        # heterogeneous node-class identity (core.profiles.NodeClass):
+        # virtual service-time multipliers charged by the event core —
+        # the executed compute (and the token stream) is class-invariant
+        self.node_class = "balanced"
+        self.prefill_scale = 1.0
+        self.decode_scale = 1.0
         self._batch_evt = False      # a "batch" event is already queued
         self._evictions_seen = 0     # pool evictions already ledgered
         # layer-streaming mode (overlapped transfer): per-rid payloads
@@ -234,6 +245,8 @@ class DecodeNode:
                  max_slots: int = 8, fused: Optional[bool] = None,
                  spec=None):
         self.iid = iid
+        self.cfg = cfg
+        self.params = params
         self.pool = PagedKVPool(cfg, num_blocks=num_blocks,
                                 block_size=block_size)
         self.engine = DecodeEngine(cfg, params, self.pool,
@@ -241,11 +254,26 @@ class DecodeNode:
                                    spec=spec)
         self.requests: Dict[int, ServeRequest] = {}
         self.draining = False        # pending role flip: no new traffic
+        self.decommissioning = False # draining back into the node pool
         self.crashed = False         # fault-injected: memory/work lost
         self.ejected = False         # health-timeout removal (hang)
         self.hung_until = 0.0        # straggling until this virtual time
         self.busy_until = 0.0        # virtual time the node frees up
+        self.node_class = "balanced"
+        self.prefill_scale = 1.0     # chunked-prefill absorption cost
+        self.decode_scale = 1.0
         self._step_evt = False       # a "step" event is already queued
+        # DynaServe-style elasticity: a lazily built PrefillEngine over
+        # the SAME params lets this node absorb chunked prefill work
+        # during a spike (serving/frontend.py schedules the chunks
+        # between decode steps); at most one absorb job in flight
+        self._absorber: Optional[PrefillEngine] = None
+        self._absorb_job: Optional[object] = None
+
+    def absorber(self) -> PrefillEngine:
+        if self._absorber is None:
+            self._absorber = PrefillEngine(self.cfg, self.params)
+        return self._absorber
 
     def can_admit(self) -> bool:
         return not (self.draining or self.crashed or self.ejected) \

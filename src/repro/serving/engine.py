@@ -160,6 +160,8 @@ class PrefillEngine:
         self.state_restores = 0      # warm runs seeded from a snapshot
         self.prefill_batches = 0     # jitted batch launches
         self.bucket_hits = 0         # launches on an already-seen shape
+        self.chunked_prefills = 0    # prompts completed via iter_chunks
+        self.chunked_chunks = 0      # individual chunk launches
         self._shapes_seen: set = set()
 
     def _prefill(self, batch: Tree, *, last_index: jax.Array,
@@ -539,6 +541,62 @@ class PrefillEngine:
         # stream the FULL prompt's layers (prefix stitched back on): the
         # receiver's layout is identical to a cold prefill's
         self._emit_layers(on_layer, 0, k, v)
+        return out
+
+    # ------------------------------------------------- chunked prefill
+    def chunk_bounds(self, n: int, chunk_tokens: int) -> List[int]:
+        """Interior cut points for a chunked prefill of an ``n``-token
+        prompt. Cuts land on ``prefix_align`` boundaries (the same
+        contract the prefix store's aligned acquire enforces) and the
+        final chunk always keeps >= 1 token, so each continuation is a
+        legal ``run_suffix``."""
+        align = max(self.prefix_align, 1)
+        step = max(align, (int(chunk_tokens) // align) * align)
+        return list(range(step, n, step))
+
+    def iter_chunks(self, tokens: Sequence[int], *, chunk_tokens: int,
+                    frames: Optional[object] = None):
+        """DynaServe-style chunked prefill: run the prompt as a cold
+        first chunk followed by ``run_suffix`` continuations, threading
+        the stitched KV and (for SSM/hybrid stacks) the advanced
+        recurrent state across chunks. Yields ``(n_chunk_tokens, out)``
+        after each chunk so an event-driven caller can interleave other
+        work (decode steps) between chunks; the final yield's output
+        covers the full prompt and is token-identical to
+        ``run([tokens])[0]`` — it is the identical warm-continuation
+        machinery the prefix store's bitwise contracts already pin."""
+        assert self.supports_prefix_reuse, self.cfg.name
+        toks = list(tokens)
+        n = len(toks)
+        cuts = [0] + self.chunk_bounds(n, chunk_tokens) + [n]
+        out: Optional[PrefillOutput] = None
+        for lo, hi in zip(cuts, cuts[1:]):
+            chunk = toks[lo:hi]
+            if lo == 0:
+                out = self.run(
+                    [chunk],
+                    frames=[frames] if frames is not None else None)[0]
+            else:
+                pkv = None
+                if out.k is not None:
+                    pkv = jnp.concatenate([out.k, out.v], axis=-1)
+                out = self.run_suffix(
+                    chunk, prefix_kv=pkv, frames=frames,
+                    state=out.mamba_state
+                    if self.requires_state_restore else None,
+                    prefix_len=lo)
+            self.chunked_chunks += 1
+            yield hi - lo, out
+        self.chunked_prefills += 1
+
+    def run_chunked(self, tokens: Sequence[int], *, chunk_tokens: int,
+                    frames: Optional[object] = None) -> PrefillOutput:
+        """Drain ``iter_chunks``; returns the full-prompt output."""
+        out: Optional[PrefillOutput] = None
+        for _, out in self.iter_chunks(tokens, chunk_tokens=chunk_tokens,
+                                       frames=frames):
+            pass
+        assert out is not None
         return out
 
 

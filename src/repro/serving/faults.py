@@ -228,6 +228,14 @@ class FaultTolerance:
 
     # ------------------------------------------------------- dispatch
     def dispatch(self, kind: str, t: float, obj):
+        # windowed retention for the long-run ledgers (identical trims on
+        # identical runs, so bit-identical-log comparisons still hold)
+        if len(self.log) > 4096:
+            del self.log[:-2048]
+        if len(self.recovery_walls) > 512:
+            del self.recovery_walls[:-256]
+        if len(self.faults) > 512:
+            del self.faults[:-256]
         if kind == "fault":
             self._n_pending -= 1
             self._fault(t, obj)
@@ -316,6 +324,16 @@ class FaultTolerance:
         else:
             if g.sched is not None:
                 g.sched.fail_node(node.iid)
+            # a chunked-prefill absorb job dies with the node: no token
+            # streamed yet, so the request requeues from scratch (its
+            # partial chunk KV lived only in the dead pool)
+            job = getattr(node, "_absorb_job", None)
+            if job is not None:
+                job.dead = True
+                node._absorb_job = None
+                node.pool.release(job.req.rid)
+                g.absorbs["absorb_displaced"] += 1
+                displaced.append(job.req)
             displaced.extend(node.requests.values())
             node.engine.evict_all()
             for rid in list(node.requests):
@@ -442,6 +460,11 @@ class FaultTolerance:
         else:
             fresh = DecodeNode(iid, g.cfg, g.params, **g.decode_kwargs)
             g.decodes[g.decodes.index(node)] = fresh
+        # the substitute lands on the same physical iron: its node class
+        # (virtual service-time multipliers, pool-lease identity) carries
+        fresh.node_class = node.node_class
+        fresh.prefill_scale = node.prefill_scale
+        fresh.decode_scale = node.decode_scale
         fresh.busy_until = t
         for rec in self.faults:
             if rec.iid == iid and rec.t_substitute_ready < 0.0:

@@ -53,8 +53,10 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import random
 import time
 import zlib
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -85,6 +87,23 @@ def _median(xs: Sequence[float]) -> float:
     if n % 2:
         return s[n // 2]
     return 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+@dataclass
+class AbsorbJob:
+    """One chunked prefill running ON a decode node (DynaServe-style
+    elasticity): ``chunks`` is the engine's ``iter_chunks`` generator,
+    stepped one chunk per ``absorb`` event so decode steps interleave
+    between chunks on the virtual timeline. The node's pool blocks for
+    prompt + generation were reserved at job start; the final chunk's
+    stitched KV is written there and the request admits in place — no
+    transfer, the KV is already home."""
+    req: ServeRequest
+    node: DecodeNode
+    chunks: object                  # PrefillEngine.iter_chunks generator
+    n_left: int                     # chunks not yet run
+    out: object = None              # latest (cumulative) PrefillOutput
+    dead: bool = False              # node crashed/ejected under the job
 
 
 class ServeGroup:
@@ -118,7 +137,9 @@ class ServeGroup:
                  decode_kwargs: Optional[dict] = None,
                  spec=None, fault_plan=None,
                  fault_kwargs: Optional[dict] = None,
-                 service_model=None):
+                 service_model=None,
+                 absorb_prefill: bool = False,
+                 absorb_chunk_tokens: int = 16):
         self.gid = gid
         self.scenario = scenario
         self.cfg = cfg
@@ -157,8 +178,20 @@ class ServeGroup:
         self.n_accepted = 0
         self.accepted: List[int] = []              # recent rids admitted
         # (t, old_iid, new_iid, "P->D" | "D->P"); t is the tick number
-        # under the staged shim, virtual seconds under the event loop
+        # under the staged shim, virtual seconds under the event loop.
+        # The list keeps a bounded window; n_flips is the monotonic count
         self.flips: List[Tuple[float, str, str, str]] = []
+        self.n_flips = 0
+        # ------------------------------------- autoscale / elasticity
+        self.scaler = None             # AutoScaler back-ref (scale events)
+        self.scale_op = None           # in-flight ScaleOp (adjuster yields)
+        self.absorb_prefill = bool(absorb_prefill)
+        self.absorb_chunk_tokens = int(absorb_chunk_tokens)
+        self.absorb_retry_s = 2e-3     # slot-wait poll for the final chunk
+        self.absorbs: Dict[str, int] = {
+            "absorb_requests": 0, "absorb_chunks": 0,
+            "absorb_tokens": 0, "absorb_displaced": 0}
+        self.on_displaced = None       # gateway hook: crashed absorb jobs
         # observed stats feeding the ratio adjuster; consumers only read
         # bounded tails, so the event handlers trim these to a window
         self.prefill_batch_s: List[float] = []     # wall time per batch
@@ -183,20 +216,80 @@ class ServeGroup:
                                      **(fault_kwargs or {}))
 
     # ------------------------------------------------- node construction
-    def _new_prefill(self, t: float) -> PrefillNode:
-        iid = f"{self._prefix}P{next(self._n_p)}"
+    def _set_class(self, node, ncls):
+        if ncls is not None:
+            node.node_class = ncls.name
+            node.prefill_scale = ncls.prefill_scale
+            node.decode_scale = ncls.decode_scale
+        return node
+
+    def _new_prefill(self, t: float, *, iid: Optional[str] = None,
+                     ncls=None) -> PrefillNode:
+        iid = iid or f"{self._prefix}P{next(self._n_p)}"
         node = PrefillNode(iid, self.cfg, self.params,
                            **self.prefill_kwargs)
         self.meta.gather_instance(t, iid, "P", self.gid)
         self.meta.health_report(t, iid)
-        return node
+        return self._set_class(node, ncls)
 
-    def _new_decode(self, t: float) -> DecodeNode:
-        iid = f"{self._prefix}D{next(self._n_d)}"
+    def _new_decode(self, t: float, *, iid: Optional[str] = None,
+                    ncls=None) -> DecodeNode:
+        iid = iid or f"{self._prefix}D{next(self._n_d)}"
         node = DecodeNode(iid, self.cfg, self.params, **self.decode_kwargs)
         self.meta.gather_instance(t, iid, "D", self.gid)
         self.meta.health_report(t, iid)
+        return self._set_class(node, ncls)
+
+    # ---------------------------------------- autoscale node lifecycle
+    def find_node(self, iid: str):
+        for n in self.prefills + self.decodes:
+            if n.iid == iid:
+                return n
+        return None
+
+    def add_node(self, t: float, role: str, *, iid: Optional[str] = None,
+                 ncls=None):
+        """Provisioned capacity joins the group (the terminal event of a
+        scale-up op): the node registers in the MetaStore, fresh
+        capacity retries stranded hand-offs and pending gateway work."""
+        if role == "P":
+            node = self._new_prefill(t, iid=iid, ncls=ncls)
+            node.busy_until = t
+            self.prefills.append(node)
+        else:
+            node = self._new_decode(t, iid=iid, ncls=ncls)
+            node.busy_until = t
+            self.decodes.append(node)
+        self.event_log.append((t, "scale"))
+        if self._tickless:
+            for p in self.prefills:
+                if p.waiting:
+                    self.schedule(t, "xfer", p)
+            if self.sched is not None and not self.sched.idle():
+                self.schedule(t, "pump", None)
+        if self.on_capacity is not None:
+            self.on_capacity(t)
         return node
+
+    def node_drained(self, node) -> bool:
+        """No in-flight work left on a draining node (decommission can
+        complete)."""
+        if node in self.prefills:
+            return not (node.forming or node.waiting)
+        busy = bool(node.requests) or node._absorb_job is not None
+        if self.sched is not None and self.sched.pending_for(node.iid):
+            busy = True
+        return not busy
+
+    def remove_node(self, t: float, node):
+        """Decommission a drained node out of the group (back to the
+        shared pool — the AutoScaler owns the pool-side accounting)."""
+        if node in self.prefills:
+            self.prefills.remove(node)
+        elif node in self.decodes:
+            self.decodes.remove(node)
+        self.meta.remove_instance(t, node.iid)
+        self.event_log.append((t, "scale"))
 
     @property
     def ratio(self) -> Tuple[int, int]:
@@ -208,6 +301,7 @@ class ServeGroup:
         gateway's least-loaded fallback signal for unknown scenarios."""
         n = sum(len(p.forming) + len(p.waiting) for p in self.prefills)
         n += sum(len(d.requests) for d in self.decodes)
+        n += sum(1 for d in self.decodes if d._absorb_job is not None)
         if self.sched is not None:
             n += len(self.sched.jobs) + len(self.sched.waiting)
         return n
@@ -236,11 +330,62 @@ class ServeGroup:
         self.rejections += 1
         return False
 
+    def try_absorb(self, req: ServeRequest, t: float) -> bool:
+        """Overload elasticity (DynaServe-style): when every prefill node
+        rejected ``req``, an idle-capacity decode node can absorb it as
+        CHUNKED prefill — the absorber engine (same params) runs
+        ``prefix_align``-sized chunks between its decode steps, and the
+        final chunk's stitched KV lands directly in the decode pool (no
+        transfer). Token-identical to a monolithic prefill by the warm-
+        continuation contracts (pinned per family in tests)."""
+        if not self.absorb_prefill or t is None:
+            return False
+        if req.gw_attempts < 1:
+            # second-chance rung: one backoff round-trip filters
+            # transient prefill-full bursts — only sustained overload
+            # spills prefill work onto the decode side
+            return False
+        total = len(req.tokens) + req.max_new_tokens + 1
+        # a chunk's service wall (>= the per-batch base) dwarfs the TPOT
+        # budget of co-resident decodes, so only a node with NO live
+        # decode work may start absorbing
+        cands = [d for d in self.decodes
+                 if not (d.draining or d.crashed or d.ejected)
+                 and d._absorb_job is None
+                 and not d.requests
+                 and not (self.sched and self.sched.pending_for(d.iid))
+                 and self._free_capacity(d) > 0]
+        for d in sorted(cands, key=lambda d: (len(d.requests), d.iid)):
+            eng = d.absorber()
+            if not eng.supports_prefix_reuse:
+                return False           # family serves cold-only: no chunks
+            if d.pool.free_blocks < d.pool.blocks_for_tokens(total):
+                continue
+            d.pool.alloc(req.rid, total)   # reserve prompt + gen room NOW
+            cuts = eng.chunk_bounds(len(req.tokens),
+                                    self.absorb_chunk_tokens)
+            job = AbsorbJob(
+                req=req, node=d,
+                chunks=eng.iter_chunks(
+                    req.tokens, chunk_tokens=self.absorb_chunk_tokens,
+                    frames=req.frames),
+                n_left=len(cuts) + 1)
+            d._absorb_job = job
+            self.accepted.append(req.rid)
+            self.n_accepted += 1
+            self.absorbs["absorb_requests"] += 1
+            self.schedule(max(t, d.busy_until), "absorb", job)
+            return True
+        return False
+
     # ------------------------------------- transfer-pipeline callbacks
     def _free_capacity(self, d: DecodeNode) -> int:
-        """Decode slots not yet spoken for (free minus in-flight jobs)."""
+        """Decode slots not yet spoken for: free minus in-flight transfer
+        jobs minus an active absorbed prefill (its final chunk admits in
+        place, so it holds one slot claim from the moment it starts)."""
         pend = self.sched.pending_for(d.iid) if self.sched else 0
-        return d.free_slot_count() - pend
+        absorb = 1 if d._absorb_job is not None else 0
+        return d.free_slot_count() - pend - absorb
 
     def _pick_decode(self, exclude: Tuple[DecodeNode, ...] = ()
                      ) -> Optional[DecodeNode]:
@@ -340,6 +485,11 @@ class ServeGroup:
             self._ev_xfer(t, obj)
         elif kind == "step":
             self._ev_step(t, obj)
+        elif kind == "absorb":
+            self._ev_absorb(t, obj)
+        elif kind == "scale":
+            if self.scaler is not None:
+                self.scaler.on_event(t, self, obj)
         elif kind in ("fault", "hb", "eject", "requeue", "recover"):
             if self.ft is not None:
                 self.ft.dispatch(kind, t, obj)
@@ -367,6 +517,9 @@ class ServeGroup:
             # deterministic chaos runs: charge the model's virtual cost,
             # not the jittery measured wall time
             w = self.service_model.prefill_batch_s(batch_tokens)
+        # heterogeneous node classes: the class scales the VIRTUAL
+        # service time only (token streams are class-invariant)
+        w *= p.prefill_scale
         self.prefill_batch_s.append(w)
         done = t + w
         p.busy_until = done
@@ -399,6 +552,19 @@ class ServeGroup:
         transfer."""
         if not p.waiting:
             return
+        for pair in [pr for pr in p.waiting
+                     if len(pr[0].generated) >= pr[0].max_new_tokens + 1]:
+            # budget exhausted at prefill (max_new=0 scoring-style
+            # requests): nothing to decode, so nothing to transfer —
+            # finish where the first token streamed
+            req, _ = pair
+            p.waiting.remove(pair)
+            req.done = True
+            req.finish_t = max(t, req.first_token_t)
+            p.pool.release(req.rid)
+            p.batch_meta.pop(req.rid, None)
+            p.staged.pop(req.rid, None)
+            self.gen_tokens.append(req.max_new_tokens)
         remaining = []
         moved = False
         for req, out in p.waiting:
@@ -455,6 +621,7 @@ class ServeGroup:
         w = time.perf_counter() - t0
         if self.service_model is not None:
             w = self.service_model.decode_step_s(n_slots)
+        w *= d.decode_scale
         self.decode_step_s.append(w)
         done = t + w
         d.busy_until = done
@@ -470,6 +637,84 @@ class ServeGroup:
                         self.schedule(done, "xfer", p)
                 if self.sched is not None and not self.sched.idle():
                     self.schedule(done, "pump", None)
+        self._trim_hists()
+
+    def _ev_absorb(self, t: float, job: AbsorbJob):
+        """Run ONE chunk of an absorbed prefill on its decode node at
+        virtual time ``t``: the chunk charges the node's busy window
+        (scaled by its class's prefill cost), so decode steps and
+        further chunks interleave on the heap. The final chunk writes
+        the full stitched KV into the node's own pool and admits the
+        request in place — TTFT ends here."""
+        d = job.node
+        req = job.req
+        if job.dead:
+            return                      # crash evacuation re-offered it
+        if d.crashed or d.ejected:
+            # no fault controller claimed the job (ft-less run): requeue
+            # through the gateway's displaced hook
+            job.dead = True
+            d._absorb_job = None
+            d.pool.release(req.rid)
+            self.absorbs["absorb_displaced"] += 1
+            if self.on_displaced is not None:
+                self.on_displaced(req, t)
+            elif not self.offer(req, t=t):
+                pass                    # dropped back to caller's ledger
+            return
+        if d.busy_until > t + 1e-12:
+            self.schedule(d.busy_until, "absorb", job)
+            return
+        if job.n_left == 1 and not d.engine.free_slots() \
+                and req.max_new_tokens >= 1:
+            # the last chunk ends in an in-place admit, and decode
+            # traffic filled every slot since the job started: hold the
+            # final chunk until a step retires a request (poll — the
+            # reserved pool blocks keep the admit itself safe)
+            self.schedule(t + self.absorb_retry_s, "absorb", job)
+            return
+        t0 = time.perf_counter()
+        n_chunk, out = next(job.chunks)
+        w = time.perf_counter() - t0
+        if self.service_model is not None:
+            w = self.service_model.prefill_batch_s(n_chunk)
+        w *= d.prefill_scale            # decode iron runs prefill slower
+        done = t + w
+        d.busy_until = done
+        self.vclock = max(self.vclock, done)
+        job.out = out
+        job.n_left -= 1
+        self.absorbs["absorb_chunks"] += 1
+        self.absorbs["absorb_tokens"] += int(n_chunk)
+        if job.n_left > 0:
+            self.schedule(done, "absorb", job)
+            return
+        # final chunk: KV home, admit in place, first token streams
+        bs = d.pool.block_size
+        if out.k is not None:
+            d.pool.write_prefill(
+                d.pool.owned(req.rid)[: (out.prompt_len + bs - 1) // bs],
+                out.k, out.v)
+        if req.first_token_t < 0.0:
+            req.first_token_t = done
+            if req.submit_t >= 0.0:
+                self.ttft_s.append(max(0.0, done - req.submit_t))
+        req.generated.append(out.first_token)
+        if req.on_token:
+            req.on_token(out.first_token)
+        self.gen_tokens.append(req.max_new_tokens)
+        d._absorb_job = None
+        if len(req.generated) >= req.max_new_tokens + 1:
+            # prefill-complete budget: nothing to decode — finish in
+            # place, the reserved blocks free without touching a slot
+            req.done = True
+            req.finish_t = done
+            d.pool.release(req.rid)
+            self._trim_hists()
+            return
+        d.finish_admit(req, out)
+        if self._tickless:
+            self._schedule_step(d, done)
         self._trim_hists()
 
     def _note_evictions(self, p: PrefillNode, t: float):
@@ -558,25 +803,40 @@ class ServeGroup:
         event mode (flip completion is itself a timestamped event)."""
         tf = float(t)
         flipped = False
-        for p in [x for x in self.prefills if x.draining]:
+        # decommissioning nodes drain OUT of the group (autoscale), not
+        # into the opposite role — the scaler's re-check owns them
+        for p in [x for x in self.prefills
+                  if x.draining and not x.decommissioning]:
             if p.forming or p.waiting:
                 continue   # in-flight prefill work must complete first
             self.prefills.remove(p)
             self.meta.remove_instance(tf, p.iid)
             d = self._new_decode(tf)
+            d.node_class = p.node_class        # same iron, new role
+            d.prefill_scale = p.prefill_scale
+            d.decode_scale = p.decode_scale
             self.flips.append((t, p.iid, d.iid, "P->D"))
+            self.n_flips += 1
             self.decodes.append(d)
             flipped = True
-        for d in [x for x in self.decodes if x.draining]:
-            if d.requests or (self.sched is not None
-                              and self.sched.pending_for(d.iid)):
+        for d in [x for x in self.decodes
+                  if x.draining and not x.decommissioning]:
+            if d.requests or d._absorb_job is not None \
+                    or (self.sched is not None
+                        and self.sched.pending_for(d.iid)):
                 continue   # in-flight decodes/transfers must clear first
             self.decodes.remove(d)
             self.meta.remove_instance(tf, d.iid)
             p = self._new_prefill(tf)
+            p.node_class = d.node_class
+            p.prefill_scale = d.prefill_scale
+            p.decode_scale = d.decode_scale
             self.flips.append((t, d.iid, p.iid, "D->P"))
+            self.n_flips += 1
             self.prefills.append(p)
             flipped = True
+        if len(self.flips) > 512:
+            del self.flips[:-256]
         if flipped:
             self.event_log.append((tf, "flip"))
             if self._tickless:
@@ -675,6 +935,10 @@ class ServeGroup:
         out["prefill_bucket_hit_rate"] = hits / batches if batches else 0.0
         out["prefill_pad_waste"] = padt / (comp + padt) \
             if comp + padt else 0.0
+        for k, v in self.absorbs.items():   # chunked-prefill elasticity
+            out[k] = float(v)
+        if self.scaler is not None:         # autoscale ledger (scale_*)
+            out.update(self.scaler.group_ledger(self.gid))
         if self.ft is not None:    # recovery ledger (serving/faults.py)
             out.update(self.ft.ledger())
         return out
@@ -688,7 +952,7 @@ class ServeGroup:
             "accepted": self.n_accepted,
             "rejections": self.rejections,
             "probe_rejections": self.probe_rejections,
-            "flips": len(self.flips),
+            "flips": self.n_flips,
             "ttft_s_mean": _mean(self.ttft_s),
             "prefix_hit_rate": pf["hit_rate"],
             "reused_tokens": pf["reused_tokens"],
@@ -771,6 +1035,16 @@ class RatioAdjuster:
         if tick_no == 0 or tick_no % self.interval:
             return None
         g = self.group
+        if len(self.decisions) > 512:       # windowed retention
+            del self.decisions[:-256]
+        if len(self.wait_votes) > 512:
+            del self.wait_votes[:-256]
+        if g.scale_op is not None:
+            # the autoscaler has a provision/decommission in flight:
+            # stand down (hysteresis too — a half-confirmed flip must
+            # not fire against the post-scale capacity)
+            self._last_want = None
+            return None
         if g.draining_nodes():
             return None   # one flip in flight at a time
         n_p, n_d = g.ratio
@@ -868,7 +1142,13 @@ class ClusterFrontend:
                  spec=None, faults=None,
                  fault_kwargs: Optional[dict] = None,
                  service_model=None,
-                 health_timeout_s: Optional[float] = None):
+                 health_timeout_s: Optional[float] = None,
+                 absorb_prefill: bool = False,
+                 absorb_chunk_tokens: int = 16,
+                 queue_bound: Optional[int] = None,
+                 gw_backoff_base_s: float = 0.005,
+                 gw_backoff_cap_s: float = 0.16,
+                 gw_max_attempts: int = 8):
         topology = topology or {"default": (1, 1)}
         if faults is not None and not tickless:
             raise ValueError("fault injection (faults=) requires "
@@ -903,8 +1183,11 @@ class ClusterFrontend:
                 spec=self._resolve_spec(spec, scenario, seed),
                 fault_plan=(faults.get(scenario)
                             if isinstance(faults, dict) else faults),
-                fault_kwargs=fault_kwargs, service_model=service_model)
+                fault_kwargs=fault_kwargs, service_model=service_model,
+                absorb_prefill=absorb_prefill,
+                absorb_chunk_tokens=absorb_chunk_tokens)
             g.on_capacity = self._note_capacity
+            g.on_displaced = self._gw_requeue
             self.groups[scenario] = g
             if adjust_ratio:
                 self.adjusters[scenario] = RatioAdjuster(
@@ -920,6 +1203,28 @@ class ClusterFrontend:
         self.adjust_period_s = float(adjust_period_s)
         self._next_adjust = self.adjust_period_s
         self._adjust_k = 0                  # synthetic adjust-step counter
+        # ---------------------------------- gateway overload control
+        # capped seeded backoff for timed arrivals no group will take
+        # (mirrors the fault controller's requeue policy); SLO-aware:
+        # ONLY past-deadline requests shed. Deadline-less requests park
+        # in ``pending`` after the attempt cap and ride capacity events.
+        self.queue_bound = queue_bound
+        self.gw_backoff_base_s = float(gw_backoff_base_s)
+        self.gw_backoff_cap_s = float(gw_backoff_cap_s)
+        self.gw_max_attempts = int(gw_max_attempts)
+        self._gw_rng = random.Random((seed << 8) ^ 0x5CA1E)
+        self.gw_requeues = 0
+        self.gw_sheds = 0
+        self.gw_backpressure = 0            # over-bound signals upstream
+        # ------------------------------------------------- autoscaler
+        self.autoscaler = None              # attached by AutoScaler()
+        self._next_autoscale = 0.0
+
+    def attach_autoscaler(self, scaler):
+        self.autoscaler = scaler
+        for g in self.groups.values():
+            g.scaler = scaler
+        self._next_autoscale = scaler.period_s
 
     def _resolve_spec(self, spec, scenario: str, seed: int):
         """Scenario-aware draft binding for ``spec=``:
@@ -972,13 +1277,22 @@ class ClusterFrontend:
 
     def _try_place(self, req: ServeRequest, t: Optional[float]) -> bool:
         """On-demand forwarding within the home group, then cross-group
-        fallback (§3.5)."""
+        fallback (§3.5); under overload, chunked-prefill absorption on an
+        idle-capacity decode node is the last resort before the request
+        waits at the gateway (degradation order: absorb before
+        backpressure)."""
         home = self.group_for(req)
         if home.offer(req, t=t):
             return True
         for g in self.groups.values():
             if g is not home and g.offer(req, t=t):
                 return True
+        if t is not None:
+            if home.try_absorb(req, t):
+                return True
+            for g in self.groups.values():
+                if g is not home and g.try_absorb(req, t):
+                    return True
         return False
 
     def _note_capacity(self, t: float):
@@ -991,6 +1305,59 @@ class ClusterFrontend:
             if not self._try_place(req, self.now):
                 still.append(req)
         self.pending = still
+
+    # --------------------------------------- overload control (gateway)
+    def queued_backlog(self, scenario: Optional[str] = None) -> int:
+        """Requests waiting at the gateway (timed backoff requeues plus
+        parked pending) — the autoscaler's demand-pressure signal and
+        the bounded-admission-queue measure."""
+        n = 0
+        for _, _, r in self.arrivals:
+            if r.gw_attempts > 0 and (
+                    scenario is None
+                    or self.group_for(r).scenario == scenario):
+                n += 1
+        for r in self.pending:
+            if scenario is None or self.group_for(r).scenario == scenario:
+                n += 1
+        return n
+
+    def _gw_shed(self, req: ServeRequest, t: float):
+        req.shed = True
+        req.done = True
+        req.finish_t = t
+        self.gw_sheds += 1
+
+    def _gw_requeue(self, req: ServeRequest, t: float):
+        """A timed arrival no group (and no absorber) would take:
+        capped, seeded exponential backoff mirroring the fault
+        controller's requeue policy. SLO-aware degradation: a request
+        already past its deadline sheds NOW (ledgered) — only
+        past-deadline requests ever shed. Past the attempt cap a
+        deadline-less request parks in ``pending`` (capacity events
+        retry it) instead of spinning the event heap; one with a
+        deadline schedules a single final wake-up at the deadline."""
+        if req.slo_deadline_s >= 0.0 and req.submit_t >= 0.0 \
+                and t >= req.submit_t + req.slo_deadline_s:
+            self._gw_shed(req, t)
+            return
+        if self.queue_bound is not None \
+                and self.queued_backlog() >= self.queue_bound:
+            self.gw_backpressure += 1
+        a = req.gw_attempts
+        req.gw_attempts = a + 1
+        if a >= self.gw_max_attempts:
+            if req.slo_deadline_s < 0.0 or req.submit_t < 0.0:
+                self.pending.append(req)
+                return
+            t_next = max(req.submit_t + req.slo_deadline_s,
+                         t + self.gw_backoff_cap_s)
+        else:
+            delay = min(self.gw_backoff_base_s * (2.0 ** a),
+                        self.gw_backoff_cap_s)
+            t_next = t + delay * (1.0 + 0.1 * self._gw_rng.random())
+        heapq.heappush(self.arrivals, (t_next, next(self._aseq), req))
+        self.gw_requeues += 1
 
     # ------------------------------------------------- tickless event loop
     def serve(self, *, deadline: Optional[float] = None,
@@ -1020,8 +1387,14 @@ class ClusterFrontend:
                         break
                     _, _, req = heapq.heappop(self.arrivals)
                     self.now = max(self.now, t_arr)
-                    if not self._try_place(req, t_arr):
-                        self.pending.append(req)
+                    if not (req.done or req.shed):
+                        if req.gw_attempts == 0 \
+                                and self.autoscaler is not None:
+                            self.autoscaler.note_arrival(
+                                self.group_for(req).scenario, t_arr,
+                                gen_tokens=req.max_new_tokens)
+                        if not self._try_place(req, t_arr):
+                            self._gw_requeue(req, t_arr)
                 else:
                     if deadline is not None and t_grp > deadline:
                         break
@@ -1033,6 +1406,11 @@ class ClusterFrontend:
                     self._retry_pending()
                 if self.adjusters and self.now >= self._next_adjust:
                     self._run_adjusters()
+                if self.autoscaler is not None \
+                        and self.now >= self._next_autoscale:
+                    self.autoscaler.step(self.now)
+                    self._next_autoscale = \
+                        self.now + self.autoscaler.period_s
                 if watch is not None and all(r.done for r in watch):
                     break
         finally:
@@ -1098,3 +1476,13 @@ class ClusterFrontend:
     def transfer_stats(self) -> Dict[str, Dict[str, float]]:
         """Per-group transfer/overlap ledgers (Fig. 10 observability)."""
         return {sc: g.transfer_stats() for sc, g in self.groups.items()}
+
+    def gateway_stats(self) -> Dict[str, float]:
+        """Overload-control ledger: backoff requeues, SLO sheds,
+        backpressure signals and the live gateway backlog."""
+        return {
+            "gw_requeues": float(self.gw_requeues),
+            "gw_sheds": float(self.gw_sheds),
+            "gw_backpressure": float(self.gw_backpressure),
+            "gw_backlog": float(self.queued_backlog()),
+        }

@@ -1,0 +1,314 @@
+"""SLO-goodput autoscaler over a shared heterogeneous pool (ISSUE 10).
+
+Covers the control plane end to end on the REAL serving path: the
+GoodputModel capacity law, NodePool lease/release/adopt accounting (a
+crashed node is never double-counted as pool capacity), scale-up /
+scale-down as events on the tickless heap, the RatioAdjuster standing
+down while a scale op is in flight, and chaos composition — a crash
+during a scale event stays deterministic (same seed, bit-identical
+MetaStore audit log) and every request served by the autoscaled run is
+token-identical to a fault-free static run. ``CHAOS_SEED`` (CI matrix)
+perturbs fault times without weakening any assertion.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from repro.core.mlops import GoodputModel, SLOSpec, substitute_ready_delay
+from repro.core.profiles import NODE_CLASSES
+from repro.serving.autoscale import AutoScaler, NodePool
+from repro.serving.cluster import ServeRequest
+from repro.serving.faults import (DeterministicService, FaultEvent,
+                                  FaultPlan)
+from repro.serving.frontend import ClusterFrontend
+
+SEED = int(os.environ.get("CHAOS_SEED", "0"))
+# slow prefill -> the burst below is TTFT-bound at ~50 req/s per node,
+# so a 500 req/s burst forces the scaler's hand
+SVC = DeterministicService(prefill_base_s=0.02, prefill_per_token_s=5e-4)
+SLO = SLOSpec(ttft_s=0.06, tpot_s=0.01)
+
+
+def _reqs(cfg, n, *, seed=3, max_new=4, rid0=0, deadline=4.0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        rid=rid0 + i,
+        tokens=list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(5, 12))))),
+        max_new_tokens=max_new, slo_deadline_s=deadline)
+        for i in range(n)]
+
+
+def _frontend(cfg, params, **kw):
+    kw.setdefault("topology", {"default": (1, 1)})
+    kw.setdefault("prefill_kwargs", {"batch_size": 2})
+    return ClusterFrontend(cfg, params=params, service_model=SVC,
+                           absorb_prefill=True, **kw)
+
+
+def _scaler(fe, inventory, **kw):
+    pool = NodePool(inventory, provision_scale=0.002)
+    kw.setdefault("period_s", 0.05)
+    kw.setdefault("window_s", 0.5)
+    kw.setdefault("cooldown_s", 0.1)
+    return pool, AutoScaler(fe, pool, SLO, **kw)
+
+
+def _burst(fe, cfg, *, n=60, trickle=10, max_new=4):
+    rs = _reqs(cfg, n, max_new=max_new)
+    for i, r in enumerate(rs):
+        fe.submit(r, at=0.002 * i)            # 500 req/s for n*2 ms
+    tail = _reqs(cfg, trickle, rid0=1000, seed=9, max_new=max_new)
+    for i, r in enumerate(tail):
+        fe.submit(r, at=1.0 + 0.2 * i)        # idle-ish tail: shrink
+    return rs + tail
+
+
+def _assert_clean(g):
+    for node in g.prefills + g.decodes:
+        assert node.pool.invariant_ok(), node.iid
+
+
+# --------------------------------------------------- GoodputModel law
+
+def test_goodput_model_gates_on_samples():
+    assert GoodputModel.from_stats(SLO, {}) is None
+    assert GoodputModel.from_stats(
+        SLO, {"prefill_batch_median_s": 0.01}) is None
+    m = GoodputModel.from_stats(SLO, {"prefill_batch_median_s": 0.01,
+                                      "decode_step_median_s": 0.002},
+                                batch_size=2, decode_slots=8,
+                                gen_tokens=4.0)
+    assert m is not None
+
+
+def test_goodput_model_capacities():
+    m = GoodputModel.from_stats(SLO, {"prefill_batch_median_s": 0.02,
+                                      "decode_step_median_s": 0.002},
+                                batch_size=2, decode_slots=8,
+                                gen_tokens=4.0)
+    # headroom = 1 - 0.02/0.06
+    assert m.prefill_headroom() == pytest.approx(2.0 / 3.0)
+    # 1 node: 2 req / 0.02 s, derated by headroom
+    assert m.prefill_capacity(1.0) == pytest.approx(100.0 * 2.0 / 3.0)
+    assert m.prefill_capacity(2.0) == pytest.approx(2 * 100.0 * 2.0 / 3.0)
+    # 8 slots emitting every 2 ms, 4 tokens per request
+    assert m.decode_capacity(1.0) == pytest.approx(8 / (4.0 * 0.002))
+    # goodput is min(rate, caps)
+    assert m.goodput(50.0, 1.0, 1.0) == pytest.approx(50.0)
+    assert m.goodput(5000.0, 1.0, 1.0) == pytest.approx(
+        min(m.prefill_capacity(1.0), m.decode_capacity(1.0)))
+
+
+def test_goodput_model_infeasible_tpot():
+    # a decode step slower than the TPOT SLO can never meet it
+    m = GoodputModel.from_stats(SLO, {"prefill_batch_median_s": 0.02,
+                                      "decode_step_median_s": 0.02})
+    assert m.decode_capacity(100.0) == 0.0
+    assert m.nodes_needed(1.0)[1] >= 1 << 20
+
+
+# ------------------------------------------------- NodePool accounting
+
+def test_pool_lease_prefers_role_bias():
+    pool = NodePool({"balanced": 1, "prefill-heavy": 1,
+                     "decode-heavy": 1})
+    assert pool.lease("P", "a").name == "prefill-heavy"
+    assert pool.lease("P", "b").name == "balanced"   # bias exhausted
+    assert pool.lease("P", "c").name == "decode-heavy"
+    assert pool.lease("P", "d") is None
+    assert pool.n_denied == 1
+
+
+def test_pool_release_is_idempotent():
+    """The crashed-node guard: releasing an iid that was already
+    released (or never leased) is a no-op — capacity cannot be
+    double-counted back into the pool."""
+    pool = NodePool({"balanced": 1})
+    assert pool.lease("D", "x") is not None
+    assert pool.total_free() == 0
+    assert pool.release("x") is True
+    assert pool.total_free() == 1
+    assert pool.release("x") is False          # second release: no-op
+    assert pool.release("never-leased") is False
+    assert pool.total_free() == 1
+    assert pool.ledger()["pool_releases_total"] == 1.0
+
+
+def test_pool_adopt_and_provision_delay():
+    pool = NodePool({}, provision_scale=0.5)
+    pool.adopt("decode-heavy")
+    assert pool.free["decode-heavy"] == 1
+    pool.adopt("unknown-class")                # falls back to balanced
+    assert pool.free["balanced"] == 1
+    ncls = NODE_CLASSES["balanced"]
+    assert pool.provision_delay(ncls) == pytest.approx(
+        0.5 * substitute_ready_delay(ncls.provision_level, storage="ssd"))
+
+
+# --------------------------------------------------- scale up / down
+
+def test_burst_scales_up_then_trickle_scales_down():
+    cfg, params = reduced_params("granite-3-8b")
+    fe = _frontend(cfg, params)
+    pool, sc = _scaler(fe, {"prefill-heavy": 2, "decode-heavy": 2})
+    rs = _burst(fe, cfg)
+    fe.serve(watch=rs, max_events=500_000)
+    g = fe.groups["default"]
+    assert all(r.done for r in rs)
+    assert not any(r.shed for r in rs)
+    st = g.transfer_stats()
+    assert st["scale_up_done"] >= 1            # burst forced a lease
+    assert st["scale_down_done"] >= 1          # trickle drained it back
+    assert st["scale_up_done"] == st["scale_up_started"]
+    assert st["scale_down_done"] == st["scale_down_started"]
+    # every lease returned: pool conserves nodes
+    led = pool.ledger()
+    assert led["pool_leased"] == 0.0
+    assert led["pool_free"] == 4.0
+    assert led["pool_leases_total"] == led["pool_releases_total"]
+    # scaled-up nodes drained out of the group again
+    assert [n.iid for n in g.prefills] == ["g0/P0"]
+    assert [n.iid for n in g.decodes] == ["g0/D0"]
+    # up ops leased the role-biased class
+    ups = [o for o in sc.ops if o.kind == "up"]
+    assert ups and all(o.ncls == "prefill-heavy" for o in ups
+                       if o.role == "P")
+    _assert_clean(g)
+
+
+def test_exhausted_pool_degrades_gracefully():
+    """No spares at all: scale-up is denied, and the burst is carried by
+    chunked-prefill absorption + gateway backoff instead of failing.
+    The burst is prefill-complete (max_new=0 scoring traffic) so the
+    decode node is genuinely idle — the only regime absorb may run in:
+    a chunk's wall dwarfs the TPOT budget of co-resident decodes."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = _frontend(cfg, params)
+    pool, sc = _scaler(fe, {})
+    # a few decoded requests first: the goodput model gates until the
+    # group has measured at least one decode step
+    warm = _reqs(cfg, 3, rid0=500, seed=11, max_new=2)
+    for i, r in enumerate(warm):
+        fe.submit(r, at=0.002 * i)
+    rs = _burst(fe, cfg, max_new=0)
+    fe.serve(watch=rs + warm, max_events=500_000)
+    g = fe.groups["default"]
+    assert all(r.done for r in rs)
+    assert pool.n_denied >= 1
+    assert g.transfer_stats()["scale_denied"] >= 1
+    assert g.absorbs["absorb_requests"] >= 1   # decode node helped
+    _assert_clean(g)
+
+
+def test_transfer_stats_exposes_scale_ledger():
+    cfg, params = reduced_params("granite-3-8b")
+    fe = _frontend(cfg, params)
+    _scaler(fe, {"balanced": 1})
+    st = fe.groups["default"].transfer_stats()
+    for key in ("scale_up_started", "scale_up_done", "scale_down_started",
+                "scale_down_done", "scale_denied", "scale_in_flight"):
+        assert key in st
+
+
+# ------------------------------------------- adjuster x scaler interplay
+
+def test_adjuster_stands_down_during_scale_op():
+    cfg, params = reduced_params("granite-3-8b")
+    fe = _frontend(cfg, params, topology={"default": (2, 2)},
+                   adjust_ratio=True)
+    adj = fe.adjusters["default"]
+    g = fe.groups["default"]
+    adj._last_want = "P->D"                    # half-confirmed flip
+    g.scale_op = object()                      # scale in flight
+    assert adj.maybe_adjust(adj.interval, backlog=50) is None
+    assert adj._last_want is None              # hysteresis reset too
+    g.scale_op = None                          # resume after
+
+
+def test_adjuster_resumes_after_scale_completes():
+    """With the op cleared the adjuster is live again: the same pressure
+    that was ignored mid-scale can flip a node on the next beat."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = _frontend(cfg, params, topology={"default": (2, 2)},
+                   adjust_ratio=True)
+    rs = _reqs(cfg, 12)
+    for i, r in enumerate(rs):
+        fe.submit(r, at=0.001 * i)
+    fe.serve(watch=rs, max_events=200_000)
+    assert all(r.done for r in rs)             # no deadlock either way
+    _assert_clean(fe.groups["default"])
+
+
+# --------------------------------------------------- chaos composition
+
+def _chaos_run(cfg, params, plan, inventory):
+    fe = _frontend(cfg, params, topology={"default": (1, 2)},
+                   prefill_kwargs={"batch_size": 1},
+                   faults=plan, health_timeout_s=0.05,
+                   fault_kwargs={"heartbeat_s": 0.02,
+                                 "recover_delay_s": 0.05})
+    pool, sc = _scaler(fe, inventory)
+    rs = _burst(fe, cfg, n=40, trickle=6)
+    fe.serve(watch=rs, max_events=500_000)
+    return fe, pool, sc, rs
+
+
+def test_crash_during_scale_deterministic_and_token_identical():
+    cfg, params = reduced_params("granite-3-8b")
+    # fault-free static reference at generous capacity
+    ref = _frontend(cfg, params, topology={"default": (2, 3)},
+                    prefill_kwargs={"batch_size": 1})
+    ref_rs = _burst(ref, cfg, n=40, trickle=6)
+    ref.serve(watch=ref_rs, max_events=500_000)
+    golden = {r.rid: tuple(r.generated) for r in ref_rs}
+
+    # crash a decode node mid-burst, while the scaler is provisioning
+    rng = np.random.default_rng(1000 + SEED)
+    t_crash = float(rng.uniform(0.02, 0.08))
+    plan = FaultPlan([FaultEvent(t_crash, "crash", "g0/D0", 0.05)])
+    sigs = []
+    for _ in range(2):
+        fe, pool, sc, rs = _chaos_run(cfg, params, plan,
+                                      {"prefill-heavy": 1, "balanced": 1})
+        g = fe.groups["default"]
+        assert all(r.done or r.shed for r in rs)
+        for r in rs:
+            if r.done and not r.shed:
+                assert tuple(r.generated) == golden[r.rid], r.rid
+        st = g.transfer_stats()
+        # ft and scale ledgers stay mutually consistent
+        assert st.get("ft_crashes", 0) >= 1
+        assert st["scale_up_started"] >= st["scale_up_done"]
+        assert st["scale_down_started"] >= st["scale_down_done"]
+        led = pool.ledger()
+        assert led["pool_leases_total"] >= led["pool_releases_total"]
+        # whatever is not released is still genuinely leased out
+        assert led["pool_leased"] == (led["pool_leases_total"]
+                                      - led["pool_releases_total"])
+        # conservation: inventory only grows by adopted base nodes
+        assert led["pool_free"] + led["pool_leased"] == \
+            2.0 + led["pool_adopted"]
+        _assert_clean(g)
+        sigs.append((tuple(fe.meta.events), fe.meta.n_events,
+                     tuple(sorted((r.rid, tuple(r.generated))
+                                  for r in rs))))
+    # same seed -> bit-identical audit log and token streams
+    assert sigs[0] == sigs[1]
+
+
+def test_crashed_scaled_node_not_double_counted():
+    """Crash the node the scaler leased: its lease must stay held (or
+    release exactly once on decommission) — pool free+leased is conserved
+    at the inventory size through crash, reboot, drain, decommission."""
+    cfg, params = reduced_params("granite-3-8b")
+    plan = FaultPlan([FaultEvent(0.3, "crash", "g0/S0", 0.05)])
+    fe, pool, sc, rs = _chaos_run(cfg, params, plan, {"prefill-heavy": 2})
+    assert all(r.done or r.shed for r in rs)
+    led = pool.ledger()
+    assert led["pool_free"] + led["pool_leased"] == \
+        2.0 + led["pool_adopted"]
+    assert led["pool_releases_total"] <= led["pool_leases_total"]
+    _assert_clean(fe.groups["default"])

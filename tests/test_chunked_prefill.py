@@ -1,0 +1,130 @@
+"""DynaServe-style chunked prefill on the real engines (ISSUE 10).
+
+The elasticity lever behind prefill absorption: a long prompt is split
+into aligned chunks threaded through ``run_suffix`` (stitched KV +
+recurrent state), so an idle decode node can absorb prefill work a few
+chunks at a time. The bar is TOKEN IDENTITY per config family: the
+chunked first token AND the full greedy decode stream must equal the
+monolithic prefill's (KV is additionally bitwise for the attn-free /
+hybrid families, whose recurrent scan fixes the geometry; attention
+KV under per-chunk padded geometry may differ in ulps, which the pinned
+decode stream proves immaterial)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_params
+from parity_utils import BS, POOL_KW, admit
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.kvcache import PagedKVPool
+
+FAMILIES = ["granite-3-8b", "qwen2-moe-a2.7b", "mamba2-2.7b",
+            "jamba-1.5-large-398b"]
+STATEFUL = {"mamba2-2.7b", "jamba-1.5-large-398b"}
+
+
+def _cfg_params(arch):
+    cfg, params = reduced_params(arch)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  dispatch="sorted"))
+    return cfg, params
+
+
+def _prompt(cfg, n, seed=11):
+    rng = np.random.default_rng(seed)
+    return list(map(int, rng.integers(0, cfg.vocab_size, n)))
+
+
+# ------------------------------------------------------------- bounds
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_chunk_bounds_alignment(arch):
+    # every interior cut is a legal aligned run_suffix boundary, the
+    # step never shrinks below the alignment, and the tail keeps >= 1
+    # token — for every family's own prefix_align
+    cfg, params = _cfg_params(arch)
+    eng = PrefillEngine(cfg, params)
+    a = max(eng.prefix_align, 1)
+    for n in (7, 16, 17, 40, 123):
+        for chunk_tokens in (8, 16, 32):
+            cuts = eng.chunk_bounds(n, chunk_tokens)
+            assert cuts == sorted(set(cuts))
+            for c in cuts:
+                assert 0 < c < n and c % a == 0
+            step = max(a, (chunk_tokens // a) * a)
+            assert all(c % step == 0 for c in cuts)
+
+
+# ----------------------------------------------- first-token identity
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_chunked_first_token_matches_monolithic(arch):
+    cfg, params = _cfg_params(arch)
+    eng = PrefillEngine(cfg, params)
+    tokens = _prompt(cfg, 37)
+    mono = eng.run([tokens])[0]
+    chunked = eng.run_chunked(tokens, chunk_tokens=16)
+    assert chunked.first_token == mono.first_token
+    assert chunked.prompt_len == mono.prompt_len
+    if arch in STATEFUL:
+        # the recurrent scan fixes per-chunk geometry: state (and KV,
+        # when present) is bitwise
+        if mono.mamba_state is not None:
+            eq = jax.tree_util.tree_map(jnp.array_equal,
+                                        chunked.mamba_state,
+                                        mono.mamba_state)
+            assert all(bool(x) for x in jax.tree_util.tree_leaves(eq))
+        if mono.k is not None:
+            assert jnp.array_equal(chunked.k, mono.k)
+            assert jnp.array_equal(chunked.v, mono.v)
+
+
+@pytest.mark.parametrize("chunk_tokens", [8, 16, 24])
+def test_chunk_size_invariance(chunk_tokens):
+    cfg, params = _cfg_params("granite-3-8b")
+    eng = PrefillEngine(cfg, params)
+    tokens = _prompt(cfg, 41, seed=13)
+    mono = eng.run([tokens])[0]
+    out = eng.run_chunked(tokens, chunk_tokens=chunk_tokens)
+    assert out.first_token == mono.first_token
+
+
+# --------------------------------------------- full-stream identity
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_chunked_decode_stream_matches_monolithic(arch):
+    """The acceptance bar: greedy decode from a chunked prefill emits
+    the exact token stream of a decode from the monolithic prefill."""
+    cfg, params = _cfg_params(arch)
+    eng = PrefillEngine(cfg, params)
+    tokens = _prompt(cfg, 29, seed=7)
+    streams = []
+    for mode in ("mono", "chunked"):
+        out = (eng.run([tokens])[0] if mode == "mono"
+               else eng.run_chunked(tokens, chunk_tokens=12))
+        pool = PagedKVPool(cfg, **POOL_KW)
+        dec = DecodeEngine(cfg, params, pool, max_slots=4)
+        admit(pool, dec, 0, out)
+        toks = [out.first_token]
+        for _ in range(8):
+            emitted = dec.step()
+            toks.extend(emitted[r] for r in sorted(emitted))
+        streams.append(toks)
+        assert pool.invariant_ok()
+    assert streams[0] == streams[1]
+
+
+def test_iter_chunks_counts():
+    cfg, params = _cfg_params("granite-3-8b")
+    eng = PrefillEngine(cfg, params)
+    tokens = _prompt(cfg, 50, seed=3)
+    seen = list(eng.iter_chunks(tokens, chunk_tokens=16))
+    assert sum(n for n, _ in seen) == len(tokens)
+    assert len(seen) == len(eng.chunk_bounds(len(tokens), 16)) + 1
+    # engine-side telemetry
+    assert eng.chunked_prefills >= 1
+    assert eng.chunked_chunks >= len(seen)

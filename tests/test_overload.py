@@ -1,0 +1,164 @@
+"""Overload control at the gateway + long-run telemetry bounds (ISSUE 10).
+
+The degradation ladder when demand exceeds a cluster that cannot grow:
+absorb -> (scale) -> backpressure -> shed. These tests pin the last two
+rungs — a saturated cluster terminates by SHEDDING (ledgered, only
+requests already past their SLO deadline) instead of spinning the event
+heap, the bounded admission queue signals backpressure, and every
+telemetry buffer on the hot path stays windowed so a long-running
+frontend does not grow without bound.
+"""
+import numpy as np
+
+from conftest import reduced_params
+from repro.serving.cluster import ServeRequest
+from repro.serving.faults import DeterministicService
+from repro.serving.frontend import ClusterFrontend
+
+# prefill slow enough that a 1x1 cluster caps out near ~40 req/s
+SVC = DeterministicService(prefill_base_s=0.02, prefill_per_token_s=5e-4)
+
+
+def _reqs(cfg, n, *, seed=3, max_new=4, rid0=0, deadline=0.25):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        rid=rid0 + i,
+        tokens=list(map(int, rng.integers(0, cfg.vocab_size,
+                                          int(rng.integers(5, 12))))),
+        max_new_tokens=max_new, slo_deadline_s=deadline)
+        for i in range(n)]
+
+
+def _saturate(fe, cfg, *, n=80, deadline=0.25):
+    rs = _reqs(cfg, n, deadline=deadline)
+    for i, r in enumerate(rs):
+        fe.submit(r, at=0.001 * i)             # 1000 req/s into ~40/s
+    fe.serve(watch=rs, max_events=400_000)
+    return rs
+
+
+def test_saturated_cluster_sheds_instead_of_spinning():
+    """The regression the capped backoff exists for: a cluster that can
+    never catch up TERMINATES, shedding exactly the requests whose SLO
+    deadline passed — never a request that still had time."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                         prefill_kwargs={"batch_size": 1},
+                         service_model=SVC)
+    rs = _saturate(fe, cfg)
+    assert all(r.done for r in rs)             # serve() returned
+    shed = [r for r in rs if r.shed]
+    served = [r for r in rs if not r.shed]
+    assert shed, "an unservable burst must shed"
+    assert served, "shedding everything means admission is broken"
+    gw = fe.gateway_stats()
+    assert gw["gw_sheds"] == len(shed)
+    for r in shed:
+        # SLO-aware: shed only at/after the deadline, and ledgered
+        assert r.finish_t >= r.submit_t + r.slo_deadline_s - 1e-9
+        assert not r.generated                 # never half-served
+    for r in served:
+        assert len(r.generated) >= 1
+    for node in (fe.groups["default"].prefills
+                 + fe.groups["default"].decodes):
+        assert node.pool.invariant_ok()
+
+
+def test_backoff_is_capped_and_seeded():
+    """Retry timestamps never step more than the cap apart (plus jitter)
+    and two same-seed frontends requeue identically."""
+    cfg, params = reduced_params("granite-3-8b")
+    sigs = []
+    for _ in range(2):
+        fe = ClusterFrontend(cfg, topology={"default": (1, 1)},
+                             params=params,
+                             prefill_kwargs={"batch_size": 1},
+                             service_model=SVC, seed=5,
+                             gw_backoff_cap_s=0.04)
+        rs = _saturate(fe, cfg, n=40)
+        sigs.append((fe.gw_requeues, fe.gw_sheds,
+                     tuple(sorted((r.rid, r.shed, tuple(r.generated))
+                                  for r in rs))))
+    assert sigs[0] == sigs[1]
+    assert sigs[0][0] >= 1
+
+
+def test_bounded_queue_signals_backpressure():
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                         prefill_kwargs={"batch_size": 1},
+                         service_model=SVC, queue_bound=4)
+    _saturate(fe, cfg, n=60)
+    assert fe.gateway_stats()["gw_backpressure"] >= 1
+
+
+def test_deadline_less_requests_park_not_spin():
+    """Without an SLO deadline nothing may shed — past the attempt cap
+    the request parks in ``pending`` and completes when capacity frees
+    up, bounding the event heap."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                         prefill_kwargs={"batch_size": 1},
+                         service_model=SVC)
+    rs = _reqs(cfg, 30, deadline=-1.0)
+    for i, r in enumerate(rs):
+        fe.submit(r, at=0.001 * i)
+    fe.serve(watch=rs, max_events=400_000)
+    assert all(r.done for r in rs)
+    assert not any(r.shed for r in rs)
+    assert fe.gateway_stats()["gw_sheds"] == 0
+
+
+# ------------------------------------------------- telemetry retention
+
+def test_long_run_telemetry_stays_bounded():
+    """Memory regression: after far more traffic than any retention
+    window, every hot-path buffer has been trimmed — while the windowed
+    medians that feed the goodput model still read the recent tail."""
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                         prefill_kwargs={"batch_size": 1},
+                         service_model=SVC, adjust_ratio=True)
+    g = fe.groups["default"]
+    # synthetic long run: push every ledger way past its window
+    for i in range(6000):
+        fe.meta._audit(float(i), f"evt {i}")
+        g.flips.append((float(i), "P->D", f"n{i}"))
+        if len(g.flips) > 512:
+            del g.flips[:-256]
+    adj = fe.adjusters["default"]
+    for i in range(2000):
+        adj.decisions.append((i, "P->D"))
+        adj.wait_votes.append(i)
+    adj.maybe_adjust(adj.interval)             # triggers the trim
+    assert len(fe.meta.events) <= 4096
+    # monotonic count survives the trim (2 gathers at construction)
+    assert fe.meta.n_events == 6000 + 2
+    assert len(g.flips) <= 512
+    assert len(adj.decisions) <= 512
+    assert len(adj.wait_votes) <= 512
+    # the stats the goodput model reads are computed from [-32:] tails,
+    # which the retention windows are far wider than
+    rs = _reqs(cfg, 6, deadline=4.0)
+    for i, r in enumerate(rs):
+        fe.submit(r, at=0.002 * i)
+    fe.serve(watch=rs, max_events=100_000)
+    st = g.transfer_stats()
+    assert st["prefill_batch_median_s"] > 0.0
+    assert st["decode_step_median_s"] > 0.0
+
+
+def test_fault_ledger_trims_on_dispatch():
+    from repro.serving.faults import FaultPlan
+    cfg, params = reduced_params("granite-3-8b")
+    fe = ClusterFrontend(cfg, topology={"default": (1, 1)}, params=params,
+                         prefill_kwargs={"batch_size": 1},
+                         service_model=SVC, faults=FaultPlan([]),
+                         health_timeout_s=0.05,
+                         fault_kwargs={"heartbeat_s": 0.02})
+    ft = fe.groups["default"].ft
+    ft.log.extend((0.0, "x", "y") for _ in range(6000))
+    ft.recovery_walls.extend(0.01 for _ in range(2000))
+    ft.dispatch("hb", 0.0, None)
+    assert len(ft.log) <= 4096
+    assert len(ft.recovery_walls) <= 512
